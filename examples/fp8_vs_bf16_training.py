@@ -1,0 +1,72 @@
+"""E2E driver: train the same LM in bf16 vs the paper's FP8-LNS fabric.
+
+The paper's question at system scale: does FP8 arithmetic built from integer
+operations train as well as native float arithmetic?  Trains two identical
+models (same init, same data) for a few hundred steps and compares loss
+curves.
+
+Run:  PYTHONPATH=src python examples/fp8_vs_bf16_training.py [--steps 200]
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Dataset
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import steps
+
+
+def train(quant: str, n_steps: int, seed: int = 0):
+    cfg = get_config("qwen2-0.5b", smoke=True, quant=quant)
+    model = Model(cfg, max_seq=64)
+    data = Dataset(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8,
+                              kind="arith", seed=seed))
+    opt = adamw.OptConfig(lr=2e-3, warmup_steps=20, total_steps=n_steps)
+    step = jax.jit(steps.build_train_step(model, opt))
+    state = steps.make_train_state(model, jax.random.PRNGKey(seed))
+    losses = []
+    for i in range(n_steps):
+        state, m = step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    print("training bf16 baseline ...")
+    base = train("none", args.steps)
+    print("training FP8 weight-only (E4M3 weights, bf16 acts) ...")
+    fp8w = train("fp8_w8_train", args.steps)
+    print("training FP8-LNS W+A (E5M2 act / E4M3 weight, integer-add products) ...")
+    fp8 = train("fp8_lns", args.steps)
+
+    print(f"\n{'step':>6} {'bf16':>10} {'fp8-W':>10} {'fp8-W+A':>10}")
+    for i in range(0, args.steps, max(args.steps // 10, 1)):
+        print(f"{i:6d} {base[i]:10.4f} {fp8w[i]:10.4f} {fp8[i]:10.4f}")
+    print(f"{'final':>6} {base[-1]:10.4f} {fp8w[-1]:10.4f} {fp8[-1]:10.4f}")
+
+    tail = max(args.steps // 10, 5)
+    for name, curve in [("fp8-W", fp8w), ("fp8-W+A", fp8)]:
+        gap = np.mean(curve[-tail:]) - np.mean(base[-tail:])
+        drop_base = base[0] - np.mean(base[-tail:])
+        print(f"gap({name}) = {gap:+.4f} "
+              f"({100 * gap / max(drop_base, 1e-9):.1f}% of the bf16 improvement)")
+    assert np.mean(fp8[-tail:]) < fp8[0], "fp8 training must make progress"
+    print("NOTE: at this toy scale per-tensor W+A quantization visibly lags; "
+          "weight-only FP8 tracks bf16 (the standard large-model recipe "
+          "applies W+A with per-tile scales at much higher d_model).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving with continuous batching (smoke scale).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-780m]
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+    serve.main([
+        "--arch", args.arch, "--smoke",
+        "--requests", "6", "--slots", "3", "--gen", "12", "--prompt-len", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Empirically derive the needed carry-in for a given (fmt, op, mode).
+
+For each valid input, needed_cin = (oracle_code - (core + K)) mod 256.
+If needed values are always in {0,1}, a carry-in expression exists; print the
+truth table over the relevant input bits so the boolean expression can be
+read off / checked against the paper.
+"""
+import sys
+import itertools
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import lns
+from repro.core.formats import E4M3, E5M2, FORMATS
+from repro.core.lns import LNS_CONSTS, _lns_core
+from repro.core.rounding import Oracle
+
+BINARY = ("mul", "div")
+
+
+def analyze(fmt_name, op, mode, const_override=None, faithful=False):
+    fmt = FORMATS[fmt_name]
+    oracle = Oracle(fmt)
+    if op in BINARY:
+        X, Y = np.meshgrid(np.arange(256, dtype=np.uint8),
+                           np.arange(256, dtype=np.uint8), indexing="ij")
+        X, Y = X.ravel(), Y.ravel()
+    else:
+        X, Y = np.arange(256, dtype=np.uint8), None
+    expected, valid = oracle.quantize_all(op, X, Y)
+    K = const_override if const_override is not None else LNS_CONSTS[(fmt_name, op)]
+    core = np.asarray(_lns_core(fmt, op, X, Y))
+    base = (core + K) & 0xFF
+
+    if faithful:
+        ok0 = (base == expected["rd"]) | (base == expected["ru"])
+        b1 = (core + K + 1) & 0xFF
+        ok1 = (b1 == expected["rd"]) | (b1 == expected["ru"])
+        need = np.where(ok0 & ok1, 2, np.where(ok0, 0, np.where(ok1, 1, -1)))
+    else:
+        diff = (expected[mode].astype(np.int64) - base.astype(np.int64)) % 256
+        need = np.where(diff == 0, 0, np.where(diff == 1, 1, -1))
+
+    nv = need[valid]
+    vals, counts = np.unique(nv, return_counts=True)
+    print(f"{fmt_name} {op} {mode} K={K:#04x}: needed cin values {dict(zip(vals.tolist(), counts.tolist()))}")
+    if -1 in vals:
+        idx = np.where(valid & (need == -1))[0][:6]
+        for i in idx:
+            print(f"  impossible at X={X[i]:#04x}" + (f" Y={Y[i]:#04x}" if Y is not None else "")
+                  + f" base={base[i]:#04x} want={expected[mode][i] if not faithful else (expected['rd'][i], expected['ru'][i])}")
+        return
+
+    # Truth table over candidate bits
+    nbits = fmt.man_bits
+    bits = list(range(nbits)) + ([3] if fmt_name == "e4m3" else [2])  # + exp LSB
+    bits += [7]  # sign
+    if Y is not None:
+        cols = [(f"x{b}", (X >> b) & 1) for b in bits] + [(f"y{b}", (Y >> b) & 1) for b in bits]
+    else:
+        cols = [(f"x{b}", (X >> b) & 1) for b in bits]
+    names = [c[0] for c in cols]
+    stacked = np.stack([c[1] for c in cols], axis=-1)
+    table = {}
+    inconsistent = []
+    for i in np.where(valid)[0]:
+        key = tuple(stacked[i])
+        v = need[i]
+        if key in table and table[key] != v and 2 not in (table[key], v):
+            inconsistent.append(key)
+        if key not in table or table[key] == 2:
+            table[key] = v
+    if inconsistent:
+        print(f"  carry-in NOT a function of bits {names}: {len(set(inconsistent))} clashes")
+        return
+    print(f"  consistent truth table over {names} ({len(table)} rows); rows needing cin=1:")
+    for key, v in sorted(table.items()):
+        if v == 1:
+            print("   ", " ".join(f"{n}={b}" for n, b in zip(names, key)))
+
+
+if __name__ == "__main__":
+    fmt, op, mode = sys.argv[1], sys.argv[2], sys.argv[3]
+    const = int(sys.argv[4], 16) if len(sys.argv) > 4 else None
+    analyze(fmt, op, mode, const, faithful=(mode == "faithful"))

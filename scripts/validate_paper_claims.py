@@ -1,0 +1,67 @@
+"""Exhaustively validate every Table 2/3 cell of the paper against the oracle.
+
+Prints a pass/fail matrix with mismatch counts; used to resolve the paper's
+notation ambiguities (rsqrt shift order) and catch transcription bugs early.
+"""
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import carry_ins, lns
+from repro.core.formats import E4M3, E5M2
+from repro.core.rounding import MODES, Oracle
+
+BINARY = ("mul", "div")
+UNARY = ("square", "recip", "sqrt", "rsqrt")
+
+
+def grids(binary: bool):
+    if binary:
+        X, Y = np.meshgrid(np.arange(256, dtype=np.uint8),
+                           np.arange(256, dtype=np.uint8), indexing="ij")
+        return X.ravel(), Y.ravel()
+    return np.arange(256, dtype=np.uint8), None
+
+
+def main():
+    results = []
+    for fmt in (E5M2, E4M3):
+        oracle = Oracle(fmt)
+        for op in BINARY + UNARY:
+            X, Y = grids(op in BINARY)
+            expected, valid = oracle.quantize_all(op, X, Y)
+            rd, ru = expected["rd"], expected["ru"]
+            for mode in MODES + ("faithful",):
+                spec = carry_ins.CARRY_INS[(fmt.name, op)][mode]
+                if spec is None:
+                    results.append((fmt.name, op, mode, "n/a (dash in table)", 0, 0))
+                    continue
+                got = np.asarray(lns.lns_op_raw(fmt, op, mode, X, Y))
+                if mode == "faithful":
+                    ok = (got == rd) | (got == ru)
+                else:
+                    ok = got == expected[mode]
+                bad = int((~ok & valid).sum())
+                tot = int(valid.sum())
+                status = "PASS" if bad == 0 else f"FAIL {bad}/{tot}"
+                results.append((fmt.name, op, mode, status, bad, tot))
+                if bad and bad <= 8:
+                    idx = np.where(~ok & valid)[0][:8]
+                    for i in idx:
+                        xv, yv = X[i], (Y[i] if Y is not None else None)
+                        exp = expected[mode][i] if mode != "faithful" else (rd[i], ru[i])
+                        print(f"  mismatch {fmt.name} {op} {mode}: X={xv:#04x}"
+                              + (f" Y={yv:#04x}" if yv is not None else "")
+                              + f" got={got[i]:#04x} want={exp}")
+    print(f"\n{'fmt':6} {'op':8} {'mode':10} status")
+    fails = 0
+    for fmt, op, mode, status, bad, tot in results:
+        print(f"{fmt:6} {op:8} {mode:10} {status}")
+        fails += bad > 0
+    print(f"\n{fails} failing cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing."""
+from . import store
+
+__all__ = ["store"]

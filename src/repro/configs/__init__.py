@@ -1,0 +1,63 @@
+"""Architecture registry: ``get_config(arch_id)`` + shape definitions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .base import ModelConfig, QuantConfig
+
+from .qwen2_0_5b import CONFIG as _qwen2
+from .gemma2_27b import CONFIG as _gemma2
+from .qwen3_14b import CONFIG as _qwen3
+from .gemma3_12b import CONFIG as _gemma3
+from .whisper_base import CONFIG as _whisper
+from .jamba_v01_52b import CONFIG as _jamba
+from .deepseek_v2_lite_16b import CONFIG as _dsv2
+from .granite_moe_3b import CONFIG as _granite
+from .llava_next_mistral_7b import CONFIG as _llava
+from .mamba2_780m import CONFIG as _mamba2
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _qwen2, _gemma2, _qwen3, _gemma3, _whisper,
+        _jamba, _dsv2, _granite, _llava, _mamba2,
+    ]
+}
+
+# The assigned input-shape set (seq_len, global_batch, kind).
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# long_500k requires sub-quadratic attention state: run for SSM/hybrid and
+# the sliding-window-dominant gemmas; skip for pure full-attention archs.
+LONG_CONTEXT_ARCHS = {"mamba2-780m", "jamba-v0.1-52b", "gemma2-27b", "gemma3-12b"}
+
+
+def shape_supported(arch: str, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch, shape) cell."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "pure full-attention arch: 500k KV decode excluded (DESIGN.md §6)"
+    return True, ""
+
+
+def get_config(arch: str, *, quant: str = "none", smoke: bool = False) -> ModelConfig:
+    cfg = CONFIGS[arch]
+    if smoke:
+        cfg = cfg.smoke()
+    if quant != "none":
+        if quant == "fp8_w8":  # static weight-only FP8 (inference)
+            qc = QuantConfig(enabled=False, static_weights=True)
+        elif quant == "fp8_w8kv8":  # weights + KV cache in FP8 (serving)
+            qc = QuantConfig(enabled=False, static_weights=True, kv_cache_fp8=True)
+        elif quant == "fp8_w8_train":  # weight-only quantized training
+            qc = QuantConfig(enabled=True, act_quant=False)
+        else:
+            impl = {"fp8_lns": "xla", "fp8_lns_pallas": "lns"}[quant]
+            qc = QuantConfig(enabled=True, matmul_impl=impl)
+        cfg = dataclasses.replace(cfg, quant=qc)
+    return cfg

@@ -1,0 +1,19 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified].  The anyres vision tower is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (n_img_tokens x d_model) prepended to the text
+sequence; the Mistral backbone is real."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=32000,
+    n_img_tokens=576,  # one 24x24 anyres base tile
+    act_fn="silu",
+)

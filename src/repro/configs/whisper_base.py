@@ -1,0 +1,24 @@
+"""Whisper-base [arXiv:2212.04356; unverified]: enc-dec transformer backbone.
+
+The conv/mel frontend is a STUB: ``input_specs()`` provides precomputed
+frame embeddings [B, 1500, 512].  MHA (kv == heads).  Shapes beyond the
+real 448-token decoder budget are exercised structurally (see DESIGN.md).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,          # decoder layers
+    n_enc_layers=6,
+    enc_context=1500,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab=51865,
+    tie_embeddings=True,
+    act_fn="gelu",
+    rope_theta=10000.0,
+)

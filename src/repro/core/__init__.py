@@ -1,0 +1,27 @@
+"""Core: the paper's FP8-via-integer (LNS) arithmetic and quantization."""
+from .formats import E4M3, E5M2, FORMATS, FP8Format
+from .carry_ins import CARRY_INS, Unsupported, carry_in
+from .lns import LNS_CONSTS, lns_op, lns_op_raw
+from .quant import QTensor, decode, decode_lut, dequantize, encode, quantize
+from .rounding import MODES, Oracle
+
+__all__ = [
+    "E4M3",
+    "E5M2",
+    "FORMATS",
+    "FP8Format",
+    "CARRY_INS",
+    "Unsupported",
+    "carry_in",
+    "LNS_CONSTS",
+    "lns_op",
+    "lns_op_raw",
+    "QTensor",
+    "decode",
+    "decode_lut",
+    "dequantize",
+    "encode",
+    "quantize",
+    "MODES",
+    "Oracle",
+]

@@ -1,0 +1,218 @@
+"""The paper's approximate FP8 operations via integer arithmetic (LNS domain).
+
+An FP8 code ``X`` interpreted as an 8-bit integer is (approximately, via
+Mitchell) the scaled log2 of its value plus the bias constant ``B``; hence
+multiplication becomes integer addition, division subtraction, square a left
+shift, square root a right shift (Table 1 of the paper).  A per-(op, format,
+rounding-mode) conditional carry-in bit (``carry_ins.py``) turns the raw
+approximation into a correctly-rounded or faithfully-rounded result wherever
+Tables 2/3 claim it is possible.
+
+Two entry points:
+
+  * :func:`lns_op_raw`   -- the paper-faithful mod-256 integer expression.
+    Valid exactly on the paper's domain (normal operands, in-range result).
+  * :func:`lns_op`       -- production wrapper: saturates on overflow,
+    flushes subnormals/underflow to zero, propagates NaN, handles zero
+    operands.  This is what the framework's quantized layers use.
+
+All functions are jit-compatible (pure jnp ops) and also accept numpy arrays.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .carry_ins import CARRY_INS, Unsupported, carry_in
+from .formats import E4M3, E5M2, FORMATS, FP8Format
+
+__all__ = [
+    "LNS_CONSTS",
+    "lns_op_raw",
+    "lns_op",
+    "Unsupported",
+]
+
+# Integer constants of Tables 2/3 (already including the -1 decrements the
+# paper applies so the carry-in can compensate in one direction).
+LNS_CONSTS = {
+    # (format, op): additive constant K such that result = f(X, Y) + K + c_in
+    ("e5m2", "mul"): 0xC4,     # X + Y - B          (B = 0x3c)
+    ("e5m2", "square"): 0xC4,  # (X << 1) - B
+    ("e5m2", "div"): 0x3B,     # X - Y + B - 1
+    # The paper prints 0x87 (eq. 21), but 2B - 1 = 2*0x3c - 1 = 0x77; with
+    # 0x77 every carry-in expression of Table 2 validates exhaustively while
+    # 0x87 fails for all 226 in-domain inputs => typo in the paper
+    # (0x88/0x87 should read 0x78/0x77).  See DESIGN.md "Paper ambiguities".
+    ("e5m2", "recip"): 0x77,   # -X + 2B - 1
+    ("e5m2", "sqrt"): 0x1E,    # (X >> 1) + B/2
+    ("e5m2", "rsqrt"): 0x5A,   # (-X) >> 1 + 3B/2
+    ("e4m3", "mul"): 0xC8,     # X + Y - B          (B = 0x38)
+    ("e4m3", "square"): 0xC8,  # (X << 1) - B
+    ("e4m3", "div"): 0x37,     # X - Y + B - 1
+    ("e4m3", "recip"): 0x6F,   # -X + 2B - 1
+    ("e4m3", "sqrt"): 0x1B,    # (X >> 1) + B/2 - 1
+    ("e4m3", "rsqrt"): 0x53,   # (-X) >> 1 + 3B/2 - 1
+}
+
+# The paper prints eq. (28)/(49) with "<<" but Table 1 and the derivation
+# give ">>".  Two shift/negate orders are plausible for rsqrt:
+#   True:   ((-X) >> 1) + K   (arithmetic shift, i.e. floor(-X/2) = -ceil(X/2))
+#   False:  (-(X >> 1)) + K   (= -floor(X/2))
+# Exhaustive validation against the rounding oracle (tests/test_lns_exhaustive)
+# selects NEG_FIRST = True; see DESIGN.md "Paper ambiguities".
+RSQRT_NEG_FIRST = True
+
+
+def _lns_core(fmt: FP8Format, op: str, X, Y=None):
+    """The shift/add part of the LNS expression, in int32, before + K + cin."""
+    Xi = X.astype(jnp.int32) if hasattr(X, "astype") else jnp.asarray(X, jnp.int32)
+    if Y is not None:
+        Yi = Y.astype(jnp.int32) if hasattr(Y, "astype") else jnp.asarray(Y, jnp.int32)
+    if op == "mul":
+        return Xi + Yi
+    if op == "square":
+        return Xi << 1
+    if op == "div":
+        return Xi - Yi
+    if op == "recip":
+        return -Xi
+    if op == "sqrt":
+        return Xi >> 1
+    if op == "rsqrt":
+        if RSQRT_NEG_FIRST:
+            return (-Xi) >> 1  # arithmetic: floor(-X/2)
+        return -(Xi >> 1)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def lns_op_raw(fmt: FP8Format | str, op: str, mode: str, X, Y=None):
+    """Paper-faithful mod-256 integer expression.  Returns uint8 codes.
+
+    Only meaningful on the paper's domain (normal operands, normal result);
+    outside it the mod-256 wraparound produces garbage by design -- exactly
+    like the minimal hardware circuit the paper synthesizes.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    cin = carry_in(fmt.name, op, mode, X, Y)
+    core = _lns_core(fmt, op, X, Y)
+    K = LNS_CONSTS[(fmt.name, op)]
+    out = (core + K + cin) & 0xFF
+    return out.astype(jnp.uint8)
+
+
+# --------------------------------------------------------------------------- #
+# Production (saturating) variant
+# --------------------------------------------------------------------------- #
+def _signed_lns_parts(fmt: FP8Format, op: str, X, Y=None):
+    """Compute (sign_bit, unwrapped magnitude code) in int32 without mod-256.
+
+    The magnitude code is the LNS result restricted to bits [0, 6] but kept
+    as a full-range integer so that overflow (> max_normal_code) and
+    underflow (< min_normal_code) are detectable before wrapping.
+    """
+    Xi = jnp.asarray(X).astype(jnp.int32)
+    mx = Xi & 0x7F
+    sx = (Xi >> 7) & 1
+    if Y is not None:
+        Yi = jnp.asarray(Y).astype(jnp.int32)
+        my = Yi & 0x7F
+        sy = (Yi >> 7) & 1
+    K = LNS_CONSTS[(fmt.name, op)]
+    # Fold the sign-free magnitude arithmetic. K is defined for the full
+    # 8-bit pattern; for magnitudes we need the equivalent constant without
+    # the sign-wrap tricks: reconstruct from first principles.
+    B = fmt.B
+    if op == "mul":
+        mag = mx + my + (K - 256 if K >= 128 else K)  # K encodes -B (+ corr.)
+        sign = sx ^ sy
+    elif op == "square":
+        mag = (mx << 1) + (K - 256 if K >= 128 else K)
+        sign = jnp.zeros_like(sx)
+    elif op == "div":
+        mag = mx - my + K
+        sign = sx ^ sy
+    elif op == "recip":
+        mag = -mx + K
+        sign = sx
+    elif op == "sqrt":
+        mag = (mx >> 1) + K
+        sign = jnp.zeros_like(sx)
+    elif op == "rsqrt":
+        mag = ((-mx) >> 1 if RSQRT_NEG_FIRST else -(mx >> 1)) + K
+        sign = jnp.zeros_like(sx)
+    else:
+        raise ValueError(op)
+    return sign, mag
+
+
+def lns_op(fmt: FP8Format | str, op: str, mode: str, X, Y=None):
+    """Saturating/guarded LNS op for production use on full uint8 tensors.
+
+    Semantics outside the paper's domain:
+      * NaN operand (or inf for E5M2)        -> canonical NaN code
+      * zero or subnormal operand (FTZ)      -> exact special-case result
+        (mul/square -> 0; div 0/y -> 0; x/0, recip(0), rsqrt(0) -> NaN/max;
+         sqrt(0) -> 0)
+      * overflow   -> +-max_normal
+      * underflow  -> +-0 (flush)
+      * sqrt/rsqrt of negative               -> NaN
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    Xi = jnp.asarray(X).astype(jnp.int32)
+    Yi = jnp.asarray(Y).astype(jnp.int32) if Y is not None else None
+
+    cin = carry_in(fmt.name, op, mode, Xi, Yi)
+    sign, mag = _signed_lns_parts(fmt, op, Xi, Yi)
+    mag = mag + cin
+
+    lo, hi = fmt.min_normal_code, fmt.max_normal_code
+    overflow = mag > hi
+    underflow = mag < lo
+    mag = jnp.clip(mag, lo, hi)
+    mag = jnp.where(underflow, 0, mag)
+
+    out = (sign << 7) | mag
+
+    # --- special operands ------------------------------------------------ #
+    def zeroish(V):  # zero or subnormal (FTZ)
+        return (V & 0x7F) < fmt.min_normal_code
+
+    def is_bad(V):  # NaN (and inf for e5m2)
+        mag_v = V & 0x7F
+        if fmt.has_inf:
+            return mag_v >= (fmt.exp_mask << fmt.man_bits)
+        return mag_v == 0x7F
+
+    nan_code = fmt.nan_code
+    max_code = fmt.max_normal_code
+
+    xz = zeroish(Xi)
+    xbad = is_bad(Xi)
+    bad = xbad
+    if Yi is not None:
+        yz = zeroish(Yi)
+        ybad = is_bad(Yi)
+        bad = bad | ybad
+
+    if op == "mul":
+        out = jnp.where(xz | yz, (sign << 7), out)
+    elif op == "square":
+        out = jnp.where(xz, 0, out)
+    elif op == "div":
+        out = jnp.where(xz & ~yz, (sign << 7), out)
+        out = jnp.where(yz, (sign << 7) | jnp.where(xz, nan_code, max_code), out)
+    elif op == "recip":
+        out = jnp.where(xz, (sign << 7) | max_code, out)  # saturate 1/0
+    elif op == "sqrt":
+        out = jnp.where(xz, 0, out)
+        out = jnp.where(((Xi >> 7) & 1) == 1, nan_code, out)
+    elif op == "rsqrt":
+        out = jnp.where(xz, max_code, out)
+        out = jnp.where(((Xi >> 7) & 1) == 1, nan_code, out)
+
+    out = jnp.where(bad, nan_code, out)
+    return out.astype(jnp.uint8)

@@ -1,0 +1,176 @@
+"""Tensor quantization to FP8 codes (jit-compatible, pure jnp).
+
+Bridges the paper's scalar bit-level ops into the framework: tensors are
+stored as uint8 FP8 codes plus a power-free float32 scale (per-tensor or
+per-channel), and matmuls/elementwise chains run in the LNS integer domain
+via :mod:`repro.kernels`.
+
+Encoding uses float32 bit manipulation (no LUT, no searchsorted) so it lowers
+to a handful of integer VPU ops on TPU; decoding is a 256-entry LUT gather
+(or equivalently integer shifts) -- both directions are cheap enough to live
+inside Pallas kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FORMATS, FP8Format
+
+__all__ = [
+    "QTensor",
+    "encode",
+    "decode",
+    "quantize",
+    "dequantize",
+    "decode_lut",
+]
+
+
+def _f32_bits(x):
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def encode(x, fmt: FP8Format | str, mode: str = "rne", *, key=None):
+    """float array -> uint8 FP8 codes with saturation and FTZ.
+
+    Modes: ``rne`` (default), ``rz``, ``stochastic`` (needs ``key``).
+    NaN -> canonical NaN code; +-inf saturates to +-max_normal.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    x = jnp.asarray(x, jnp.float32)
+    sign = (_f32_bits(x) >> 31).astype(jnp.uint32)
+    absx = jnp.abs(x)
+    isnan = jnp.isnan(x)
+    absx = jnp.where(isnan, 1.0, absx)
+    absx = jnp.minimum(absx, fmt.max_normal)
+
+    shift = 23 - fmt.man_bits
+    b = _f32_bits(absx)
+    if mode == "rne":
+        lsb = (b >> shift) & 1
+        b = b + ((1 << (shift - 1)) - 1 + lsb)
+    elif mode == "rz":
+        pass
+    elif mode == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding needs a PRNG key")
+        noise = jax.random.randint(
+            key, b.shape, 0, 1 << shift, dtype=jnp.uint32
+        )
+        b = b + noise
+    else:
+        raise ValueError(f"unknown encode mode {mode!r}")
+
+    exp = (b >> 23).astype(jnp.int32) - 127 + fmt.bias
+    man = ((b >> shift) & fmt.man_mask).astype(jnp.int32)
+    code = (exp << fmt.man_bits) | man
+
+    # Flush-to-zero: anything that would need exp field < 1.  The rounding
+    # performed above is on the f32 mantissa, so values in
+    # [min_normal/2, min_normal) have exp == 0 here and must round to either
+    # 0 or min_normal_code; the f32 rounding already decided which by bumping
+    # exp to 1 when appropriate (RNE tie at min_normal/2 rounds to 0 -- even).
+    underflow = exp < 1
+    # For values that underflow, decide round-to-min_normal vs zero.
+    half_min = 0.5 * fmt.min_normal
+    if mode == "rne":
+        to_min = absx > half_min  # tie -> zero (code 0 is "even")
+    elif mode == "rz":
+        to_min = jnp.zeros_like(absx, dtype=bool)
+    else:  # stochastic: probability proportional to distance
+        to_min = absx > half_min  # coarse; acceptable for FTZ region
+    code = jnp.where(underflow, jnp.where(to_min, fmt.min_normal_code, 0), code)
+
+    # Saturate anything the mantissa-carry pushed past the top code.
+    code = jnp.clip(code, 0, fmt.max_normal_code)
+    code = jnp.where(isnan, fmt.nan_code, code)
+    return ((sign << 7) | code.astype(jnp.uint32)).astype(jnp.uint8)
+
+
+def decode_lut(fmt: FP8Format | str) -> jnp.ndarray:
+    """256-entry float32 decode table."""
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    return jnp.asarray(fmt.code_to_float32_bits())
+
+
+def decode(codes, fmt: FP8Format | str):
+    """uint8 codes -> float32 via LUT gather (vectorizes to VPU on TPU)."""
+    lut = decode_lut(fmt)
+    return jnp.take(lut, codes.astype(jnp.int32), axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# Scaled tensors
+# --------------------------------------------------------------------------- #
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """FP8-quantized tensor: ``value ~= decode(codes) * scale``.
+
+    ``scale`` broadcasts against the decoded codes (per-tensor scalar or
+    per-channel vector).  ``fmt`` is static metadata.
+    """
+
+    codes: jnp.ndarray  # uint8
+    scale: jnp.ndarray  # float32, broadcastable
+    fmt: str  # "e5m2" | "e4m3"
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def dtype(self):
+        return jnp.uint8
+
+    def dequantize(self):
+        return decode(self.codes, self.fmt) * self.scale
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), self.fmt
+
+    @classmethod
+    def tree_unflatten(cls, fmt, children):
+        codes, scale = children
+        return cls(codes=codes, scale=scale, fmt=fmt)
+
+
+def quantize(
+    x,
+    fmt: FP8Format | str = "e4m3",
+    *,
+    axis: Optional[int] = None,
+    mode: str = "rne",
+    key=None,
+) -> QTensor:
+    """Quantize a float tensor. ``axis`` keeps a per-channel scale along it.
+
+    The scale maps the absmax onto the format's max_normal so the full
+    exponent range is used (standard FP8 training recipe).
+    """
+    if isinstance(fmt, str):
+        fmt_obj = FORMATS[fmt]
+    else:
+        fmt_obj, fmt = fmt, fmt.name
+    x = jnp.asarray(x, jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    amax = jnp.maximum(amax, 1e-12)
+    scale = (amax / fmt_obj.max_normal).astype(jnp.float32)
+    codes = encode(x / scale, fmt_obj, mode, key=key)
+    return QTensor(codes=codes, scale=scale, fmt=fmt)
+
+
+def dequantize(q: QTensor):
+    return q.dequantize()

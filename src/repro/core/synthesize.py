@@ -1,0 +1,130 @@
+"""Beyond-paper: automatic carry-in synthesis for ANY 8-bit FP format.
+
+The paper hand-derives carry-in boolean expressions for E5M2 and E4M3.  The
+derivation is mechanizable: for a given (format, op, rounding-mode), compute
+the needed correction ``(oracle - (core + K)) mod 256`` for every in-domain
+operand pair; if it is always in {0, 1} and is a consistent function of the
+operand bits the paper's circuits use (mantissa bits, the exponent LSB and
+the sign), the cell is *achievable* and the synthesized truth table IS the
+carry-in function — exactly what an FPGA LUT would store.
+
+This generalizes the paper to formats it never analyzed (E3M4, E2M5, or a
+different bias), answers "is mode X achievable for op Y?" constructively,
+and was the tool that localized the paper's six errata
+(scripts/derive_cin.py is its exploratory twin).
+
+``SynthesizedOps`` packages the result as vectorized, jit-compatible ops
+via a 64Ki-entry (binary) / 256-entry (unary) LUT lookup — semantically the
+same single-LUT hardware the paper targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .formats import FP8Format
+from .lns import _lns_core
+from .rounding import MODES, Oracle
+
+BINARY = ("mul", "div")
+UNARY = ("square", "recip", "sqrt", "rsqrt")
+OPS = BINARY + UNARY
+
+# LNS base constants from first principles (before any -1 compensation):
+#   mul: -B | square: -B | div: +B | recip: +2B | sqrt: +B/2 | rsqrt: +3B/2
+def base_consts(fmt: FP8Format, op: str) -> Tuple[int, ...]:
+    B = fmt.B
+    k = {
+        "mul": -B, "square": -B, "div": B, "recip": 2 * B,
+        "sqrt": B // 2, "rsqrt": (3 * B) // 2,
+    }[op]
+    # try the raw constant and the decremented one (the paper's trick that
+    # turns an over-approximation into carry-correctable under-approximation)
+    return (k % 256, (k - 1) % 256)
+
+
+@dataclasses.dataclass
+class Synthesized:
+    """One achievable (op, mode) cell: constant + carry LUT over raw codes."""
+
+    op: str
+    mode: str
+    const: int
+    # carry-in indexed by the full code(s): [256] or [256, 256] uint8
+    carry_lut: np.ndarray
+    n_valid: int
+
+    def apply(self, X, Y=None):
+        import jax.numpy as jnp
+
+        fmt = self._fmt
+        core = _lns_core(fmt, self.op, X, Y)
+        lut = jnp.asarray(self.carry_lut)
+        if Y is None:
+            cin = jnp.take(lut, jnp.asarray(X).astype(jnp.int32), axis=0)
+        else:
+            idx = jnp.asarray(X).astype(jnp.int32) * 256 + jnp.asarray(Y).astype(jnp.int32)
+            cin = jnp.take(lut.reshape(-1), idx, axis=0)
+        return ((core + self.const + cin) & 0xFF).astype(jnp.uint8)
+
+
+def synthesize(
+    fmt: FP8Format, op: str, mode: str
+) -> Optional[Synthesized]:
+    """Derive (constant, carry LUT) achieving ``mode`` for ``op``, or None."""
+    oracle = Oracle(fmt)
+    if op in BINARY:
+        X, Y = np.meshgrid(np.arange(256, dtype=np.uint8),
+                           np.arange(256, dtype=np.uint8), indexing="ij")
+        X, Y = X.ravel(), Y.ravel()
+    else:
+        X, Y = np.arange(256, dtype=np.uint8), None
+    expected, valid = oracle.quantize_all(op, X, Y)
+    if mode == "faithful":
+        targets = None
+        rd, ru = expected["rd"], expected["ru"]
+    else:
+        targets = expected[mode]
+
+    core = np.asarray(_lns_core(fmt, op, X, Y))
+    for K in base_consts(fmt, op):
+        base = (core + K) & 0xFF
+        if mode == "faithful":
+            ok0 = (base == rd) | (base == ru)
+            b1 = (base + 1) & 0xFF
+            ok1 = (b1 == rd) | (b1 == ru)
+            need = np.where(ok0, 0, np.where(ok1, 1, -1))
+        else:
+            diff = (targets.astype(np.int64) - base.astype(np.int64)) % 256
+            need = np.where(diff == 0, 0, np.where(diff == 1, 1, -1))
+        if (need[valid] < 0).any():
+            continue
+        # build the LUT (0 outside the domain)
+        if Y is None:
+            lut = np.zeros((256,), np.uint8)
+            lut[X[valid]] = need[valid].astype(np.uint8)
+        else:
+            lut = np.zeros((256, 256), np.uint8)
+            lut[X[valid], Y[valid]] = need[valid].astype(np.uint8)
+        s = Synthesized(op=op, mode=mode, const=K, carry_lut=lut,
+                        n_valid=int(valid.sum()))
+        s._fmt = fmt
+        return s
+    return None
+
+
+def achievability_table(fmt: FP8Format) -> Dict[str, Dict[str, bool]]:
+    """Which (op, mode) cells admit an integer+carry implementation."""
+    out: Dict[str, Dict[str, bool]] = {}
+    for op in OPS:
+        out[op] = {}
+        for mode in MODES + ("faithful",):
+            out[op][mode] = synthesize(fmt, op, mode) is not None
+    return out
+
+
+# A format the paper never analyzed: E3M4 (bias 3, 4 mantissa bits —
+# high-precision/low-range, used in some audio/DSP quantization stacks).
+E3M4 = FP8Format(name="e3m4", exp_bits=3, man_bits=4, has_inf=False)

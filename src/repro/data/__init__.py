@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from .pipeline import DataConfig, Dataset
+
+__all__ = ["DataConfig", "Dataset"]

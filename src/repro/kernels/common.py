@@ -1,0 +1,84 @@
+"""Shared helpers usable both inside Pallas kernel bodies and in jnp oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.formats import FORMATS, FP8Format
+
+
+def code_to_f32(codes, fmt: FP8Format | str):
+    """uint8 FP8 codes -> float32, by bit placement (no LUT gather).
+
+    Builds the f32 pattern with integer shifts: TPU-VPU friendly (gathers
+    are slow on TPU; this is 5 int ops + a bitcast).  Normals and zero only:
+    NaN codes map to 0 — the saturating LNS ops never emit NaN for finite
+    inputs, and quantized-layer inputs are NaN-free by construction.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    c = codes.astype(jnp.uint32)
+    sign = (c >> 7) & 0x1
+    mag = c & 0x7F
+    exp = (mag >> fmt.man_bits).astype(jnp.int32)
+    man = (mag & fmt.man_mask).astype(jnp.uint32)
+    f32_exp = (exp - fmt.bias + 127).astype(jnp.uint32)
+    bits = (sign << 31) | (f32_exp << 23) | (man << (23 - fmt.man_bits))
+    val = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    is_normal = (mag >= fmt.min_normal_code) & (mag <= fmt.max_normal_code)
+    return jnp.where(is_normal, val, 0.0)
+
+
+def lns_mul_to_f32(X, Y, fmt: FP8Format | str, mode: str = "rne"):
+    """The paper's integer-add FP8 product, decoded WIDE to float32.
+
+    The standalone multiplier of the paper emits an FP8 code, which would
+    saturate products of near-max operands (|x*y| can reach max_normal^2).
+    Inside a dot-product unit the natural design keeps the full integer LNS
+    sum (a 9-bit quantity) and widens on decode — same integer-add multiply
+    cost, no saturation, strictly more accurate accumulation.  The carry-in
+    logic (Tables 2/3) is unchanged: it only depends on operand mantissas.
+
+    Zero/subnormal operands contribute 0 (FTZ); NaN inputs propagate NaN.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    from ..core.carry_ins import carry_in
+    from ..core.lns import LNS_CONSTS
+
+    Xi = X.astype(jnp.int32)
+    Yi = Y.astype(jnp.int32)
+    sx, sy = (Xi >> 7) & 1, (Yi >> 7) & 1
+    mx, my = Xi & 0x7F, Yi & 0x7F
+    cin = carry_in(fmt.name, "mul", mode, Xi, Yi)
+    K = LNS_CONSTS[(fmt.name, "mul")]
+    mag = mx + my + (K - 256) + cin  # unwrapped: may exceed [min, max] codes
+
+    # Wide decode: exponent = floor(mag / 2^mb) - bias (any integer),
+    # mantissa = low bits.  Build the f32 pattern directly.
+    man = (mag & fmt.man_mask).astype(jnp.uint32)
+    exp = (mag >> fmt.man_bits) - fmt.bias  # arithmetic shift: floor
+    sign = (sx ^ sy).astype(jnp.uint32)
+    f32exp = (exp + 127).astype(jnp.uint32)
+    bits = (sign << 31) | (f32exp << 23) | (man << (23 - fmt.man_bits))
+    val = jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+    def zeroish(m):
+        return m < fmt.min_normal_code
+
+    def bad(m):
+        if fmt.has_inf:
+            return m >= (fmt.exp_mask << fmt.man_bits)
+        return m == 0x7F
+
+    val = jnp.where(zeroish(mx) | zeroish(my), 0.0, val)
+    val = jnp.where(bad(mx) | bad(my), jnp.nan, val)
+    return val
+
+
+def f32_to_code(x, fmt: FP8Format | str, mode: str = "rne"):
+    """float32 -> uint8 FP8 codes; thin alias of core.quant.encode (jit-safe
+    and Pallas-safe: pure bit manipulation)."""
+    from ..core.quant import encode
+
+    return encode(x, fmt, mode)

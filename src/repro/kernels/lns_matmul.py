@@ -1,0 +1,127 @@
+"""Pallas TPU kernels for FP8 matmul over uint8 LNS codes.
+
+Two implementations, both tiled for VMEM with explicit BlockSpecs:
+
+* ``lns`` (paper-faithful): each scalar product is the paper's integer
+  addition ``X + Y + K + c_in`` on the raw codes (eqs. 6/29 + Tables 2/3
+  carry-ins), evaluated as whole [bm, bn] VPU tiles per k step; product
+  codes are decoded to f32 by exponent/mantissa bit placement (no LUT) and
+  accumulated in f32.  No floating-point multiplier is ever used — the
+  multiply cost is integer adds, exactly the paper's proposition.
+
+* ``fused_dequant`` (beyond-paper TPU adaptation): decode both code tiles
+  to ``compute_dtype`` once and feed the MXU.  Same numerics as
+  decode-then-matmul, but fused so codes (1 byte/elem) are what crosses
+  HBM->VMEM: 2x less weight traffic than bf16.
+
+VMEM budget at the default (128, 128, 128) blocks: x 16 KiB + w 16 KiB +
+out 64 KiB + [bm, bn] int32 temporaries ~ a few hundred KiB << 16 MiB/core.
+Matmul dims are multiples of 128 => MXU/VPU lane aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import FORMATS
+from .common import code_to_f32, lns_mul_to_f32
+
+DEFAULT_BLOCKS = (128, 128, 128)
+
+
+def _lns_kernel(x_ref, w_ref, o_ref, *, fmt, mode, bk):
+    """Grid (M/bm, N/bn, K/bk), K innermost; o block revisited across k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bm, bk] uint8 codes
+    w = w_ref[...]  # [bk, bn] uint8 codes
+
+    def body(k, acc):
+        xk = jax.lax.dynamic_slice_in_dim(x, k, 1, axis=1)  # [bm, 1]
+        wk = jax.lax.dynamic_slice_in_dim(w, k, 1, axis=0)  # [1, bn]
+        # The paper's multiplier: one integer add + carry-in per product,
+        # decoded wide (see lns_mul_to_f32) for saturation-free accumulation.
+        return acc + lns_mul_to_f32(xk, wk, fmt, mode)  # [bm, bn] f32
+
+    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros(o_ref.shape, jnp.float32))
+    o_ref[...] += acc
+
+
+def _dequant_kernel(x_ref, w_ref, o_ref, *, fmt, compute_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = code_to_f32(x_ref[...], fmt).astype(compute_dtype)
+    w = code_to_f32(w_ref[...], fmt).astype(compute_dtype)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(a, m0, m1):
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))  # code 0 == value 0.0
+    return a
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "mode", "impl", "blocks", "interpret", "compute_dtype"),
+)
+def lns_matmul(
+    x_codes,
+    w_codes,
+    *,
+    fmt: str = "e4m3",
+    mode: str = "rne",
+    impl: str = "lns",
+    blocks=DEFAULT_BLOCKS,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+):
+    """f32[M, N] matmul of uint8 FP8 code matrices (scales applied by caller)."""
+    assert x_codes.dtype == jnp.uint8 and w_codes.dtype == jnp.uint8
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2, (x_codes.shape, w_codes.shape)
+    bm, bn, bk = blocks
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+
+    xp = _pad_to(x_codes, bm, bk)
+    wp = _pad_to(w_codes, bk, bn)
+    Mp, Kp = xp.shape
+    _, Np = wp.shape
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    if impl == "lns":
+        kernel = functools.partial(_lns_kernel, fmt=FORMATS[fmt], mode=mode, bk=bk)
+    elif impl == "fused_dequant":
+        kernel = functools.partial(
+            _dequant_kernel, fmt=FORMATS[fmt], compute_dtype=compute_dtype
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:M, :N]

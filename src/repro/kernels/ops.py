@@ -1,0 +1,108 @@
+"""Public jit'd entry points for the quantized compute fabric.
+
+``matmul_q`` is what model layers call: it dispatches between
+  * ``lns``            — paper-faithful Pallas kernel (integer-add products),
+  * ``fused_dequant``  — Pallas kernel decoding codes into the MXU,
+  * ``xla``            — plain jnp decode + dot (lets XLA fuse; the dry-run
+                         path on CPU and the fallback on any backend).
+
+On CPU (this container) Pallas kernels run in interpret mode for
+correctness validation; ``xla`` is the default for full-model lowering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import QTensor
+from .common import code_to_f32
+from .fp8_elementwise import fp8_elementwise
+from .lns_matmul import lns_matmul
+from . import ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def matmul_q(
+    x: QTensor,
+    w: QTensor,
+    *,
+    impl: str = "xla",
+    mode: str = "rne",
+    interpret: Optional[bool] = None,
+    compute_dtype=jnp.bfloat16,
+):
+    """Quantized matmul: [M, K] @ [K, N] -> f32 [M, N], scales applied.
+
+    Per-tensor scales or per-channel scales on non-contracted axes.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    if impl == "xla":
+        acc = ref.dequant_matmul_ref(
+            x.codes, w.codes, x.fmt, compute_dtype=compute_dtype
+        )
+    elif impl in ("lns", "fused_dequant"):
+        assert x.fmt == w.fmt, "operands must share a format"
+        acc = lns_matmul(
+            x.codes,
+            w.codes,
+            fmt=x.fmt,
+            mode=mode,
+            impl=impl,
+            interpret=interpret,
+            compute_dtype=compute_dtype,
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    # x.scale broadcasts over rows (per-tensor or [M,1]); w.scale over cols.
+    w_scale = jnp.squeeze(jnp.asarray(w.scale))[None, ...] if jnp.ndim(w.scale) else w.scale
+    return acc * x.scale * jnp.asarray(w_scale, jnp.float32)
+
+
+def elementwise_q(
+    op: str,
+    x: QTensor,
+    y: Optional[QTensor] = None,
+    *,
+    mode: str = "rne",
+    impl: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> QTensor:
+    """Apply a paper op to quantized tensors, staying in the code domain.
+
+    Scale algebra rides along for free in the LNS view:
+      mul: s = sx*sy | div: sx/sy | square: sx^2 | recip: 1/sx
+      sqrt: sqrt(sx) | rsqrt: 1/sqrt(sx)
+    (scales are f32 scalars/vectors — exact ops, no approximation).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    if impl == "pallas":
+        codes = fp8_elementwise(
+            op, x.codes, None if y is None else y.codes,
+            fmt=x.fmt, mode=mode, interpret=interpret,
+        )
+    else:
+        codes = ref.fp8_elementwise_ref(op, x.fmt, mode, x.codes, None if y is None else y.codes)
+    sx = x.scale
+    if op == "mul":
+        scale = sx * y.scale
+    elif op == "div":
+        scale = sx / y.scale
+    elif op == "square":
+        scale = sx * sx
+    elif op == "recip":
+        scale = 1.0 / sx
+    elif op == "sqrt":
+        scale = jnp.sqrt(sx)
+    elif op == "rsqrt":
+        scale = jax.lax.rsqrt(sx)
+    else:
+        raise ValueError(op)
+    return QTensor(codes=codes, scale=jnp.asarray(scale, jnp.float32), fmt=x.fmt)

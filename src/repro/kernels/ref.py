@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels must match bit-for-bit (allclose for
+the f32 accumulations): ``lns_matmul_ref`` materializes every pairwise LNS
+product (memory-heavy — test shapes only), ``fp8_elementwise_ref`` is the
+saturating core op itself.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.formats import FORMATS
+from ..core.lns import lns_op
+from .common import code_to_f32, lns_mul_to_f32
+
+
+def fp8_elementwise_ref(op: str, fmt, mode: str, x_codes, y_codes=None):
+    return lns_op(fmt, op, mode, x_codes, y_codes)
+
+
+def lns_matmul_ref(
+    x_codes, w_codes, fmt="e4m3", mode="rne", *, x_scale=1.0, w_scale=1.0
+):
+    """f32[M,N] = sum_k wide_decode(lns_mul(x[m,k], w[k,n])) * scales.
+
+    Materializes the [M, K, N] product tensor: oracle for small shapes.
+    Products use the wide (saturation-free) decode — see
+    ``common.lns_mul_to_f32``.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    prod = lns_mul_to_f32(x_codes[:, :, None], w_codes[None, :, :], fmt, mode)
+    acc = jnp.sum(prod, axis=1, dtype=jnp.float32)
+    return acc * jnp.asarray(x_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)
+
+
+def dequant_matmul_ref(
+    x_codes, w_codes, fmt="e4m3", *, x_scale=1.0, w_scale=1.0, compute_dtype=jnp.float32
+):
+    """The MXU-path oracle: decode both operands, dense matmul, scale."""
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    x = code_to_f32(x_codes, fmt).astype(compute_dtype)
+    w = code_to_f32(w_codes, fmt).astype(compute_dtype)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return acc * jnp.asarray(x_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)

@@ -1,0 +1,232 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell, ``jax.jit(step, in_shardings, out_shardings).lower(*specs)``
+is compiled against the production mesh (16x16 single pod / 2x16x16
+multi-pod) with 512 forced host devices; ``memory_analysis`` proves the
+per-device footprint, ``cost_analysis`` + an HLO collective scan feed the
+roofline (launch/roofline.py).  Results are cached incrementally as JSON in
+experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--quant fp8_lns]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import CONFIGS, SHAPES, get_config, shape_supported
+from ..optim import adamw
+from ..parallel import sharding
+from ..parallel.hints import default_hint_specs, use_hints
+from ..runtime import steps as steps_mod
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-SPMD HLO."""
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in COLLECTIVES:
+            tok = f" {c}(" if f" {c}(" in line else (f" {c}-start(" if f" {c}-start(" in line else None)
+            if tok is None:
+                continue
+            head, _, tail = line.partition(tok)
+            # operands are the shape tokens in the call tail; result is in head
+            opnds = _SHAPE_RE.findall(tail.split(")")[0] + ")")
+            if not opnds:  # operands referenced by name only: fall back to result
+                opnds = _SHAPE_RE.findall(head)
+            out[c] += sum(_shape_bytes(d, s) for d, s in opnds)
+            counts[c] += 1
+            break
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, quant: str = "none",
+             save: bool = True, extra_tag: str = "", patch=None) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    qtag = "" if quant == "none" else f"_{quant}"
+    name = f"{arch}_{shape}_{mesh_tag}{qtag}{extra_tag}"
+    out_path = OUT_DIR / f"{name}.json"
+    if save and out_path.exists():
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    cfg = get_config(arch, quant=quant)
+    if patch:
+        cfg = patch(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind, model, args = input_specs(cfg, shape)
+
+    if kind == "train":
+        state_sds, batch_sds = args
+        pspec = {
+            "params": sharding.param_pspecs(cfg, state_sds["params"], mesh),
+            "opt": {
+                "m": sharding.param_pspecs(cfg, state_sds["opt"]["m"], mesh),
+                "v": sharding.param_pspecs(cfg, state_sds["opt"]["v"], mesh),
+                "step": jax.sharding.PartitionSpec(),
+            },
+        }
+        bspec = sharding.batch_pspecs(cfg, mesh)
+        in_sh = (sharding.named(mesh, pspec), sharding.named(mesh, bspec))
+        out_sh = (sharding.named(mesh, pspec), None)
+        step = steps_mod.build_train_step(model, adamw.OptConfig())
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0,))
+    elif kind == "prefill":
+        params_sds, batch_sds = args
+        ps = sharding.param_pspecs(cfg, params_sds, mesh)
+        bs = sharding.batch_pspecs(cfg, mesh)
+        bs = {k: v for k, v in bs.items() if k in batch_sds}
+        step = steps_mod.build_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(sharding.named(mesh, ps),
+                                             sharding.named(mesh, bs)))
+    else:  # decode
+        params_sds, cache_sds, tok_sds, pos_sds = args
+        B = tok_sds.shape[0]
+        ps = sharding.param_pspecs(cfg, params_sds, mesh)
+        cs = sharding.cache_pspecs(cfg, cache_sds, mesh, B)
+        tok_spec = jax.sharding.PartitionSpec(
+            sharding.fsdp_axes(mesh) if B % sharding.dp_size(mesh) == 0 else None
+        )
+        step = steps_mod.build_decode_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                sharding.named(mesh, ps),
+                sharding.named(mesh, cs),
+                jax.sharding.NamedSharding(mesh, tok_spec),
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            ),
+            out_shardings=(None, sharding.named(mesh, cs)),
+            donate_argnums=(1,),
+        )
+
+    batch_shardable = kind != "decode" or (
+        args[2].shape[0] % sharding.dp_size(mesh) == 0
+    )
+    with mesh, use_hints(mesh, default_hint_specs(cfg, mesh, batch_shardable=batch_shardable, decode=(kind == "decode"))):
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    from .hlo_analysis import analyze
+    hlo_text = compiled.as_text()
+    hlo = analyze(hlo_text)
+    if save:
+        import gzip
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        with gzip.open(OUT_DIR / f"{name}.hlo.gz", "wt") as f:
+            f.write(hlo_text)
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_tag, "quant": quant,
+        "tag": extra_tag,
+        "kind": kind,
+        "n_devices": mesh.size,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost_xla_no_trip": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "hlo": hlo,
+    }
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(result, indent=1))
+    print(f"[dryrun] {name}: lower {t_lower:.0f}s compile {t_compile:.0f}s "
+          f"peak/dev {(result['memory']['peak_bytes'] or 0)/2**30:.2f} GiB "
+          f"flops/dev {hlo['flops']:.3g} coll/dev {hlo['collective_operand_bytes']/2**30:.2f} GiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in CONFIGS:
+            for shape in SHAPES:
+                ok, why = shape_supported(arch, shape)
+                if ok:
+                    cells.append((arch, shape))
+                else:
+                    print(f"[dryrun] SKIP {arch} x {shape}: {why}")
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        try:
+            run_cell(arch, shape, multi_pod=args.multipod, quant=args.quant,
+                     save=not args.force)
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            traceback.print_exc()
+            failures.append((arch, shape, str(e)[:200]))
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

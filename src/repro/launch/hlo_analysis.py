@@ -1,0 +1,252 @@
+"""Trip-count-aware cost analysis over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+under-reports every scanned structure (layer stacks, chunked attention, SSD)
+by its trip count.  This module re-derives per-device FLOPs / bytes /
+collective traffic from ``compiled.as_text()``, multiplying loop bodies by
+the ``known_trip_count`` XLA records in ``backend_config`` — exact for
+lax.scan-generated loops.
+
+Collective accounting (per device):
+  * ``operand_bytes``  — sum of operand sizes (the spec's roofline measure)
+  * ``link_bytes``     — ring-model effective bytes through a link:
+      all-gather: output, reduce-scatter: operand, all-reduce: 2x operand,
+      all-to-all / collective-permute: operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "floor",
+    "ceil", "round-nearest-even", "sign", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "remainder", "power",
+    "atan2", "clamp",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "sine", "cosine", "logistic", "erf", "tan",
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z0-9\-]+)\((.*)$"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"{:n ]+(\d+)')
+_CALL_ATTR = re.compile(r"(?:calls|body|to_apply|branch_computations)=\{?%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across all shapes in a type string."""
+    elems = tot = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in ("token",):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, tot
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_operand: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES}
+    )
+    coll_link: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES}
+    )
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES}
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0, include_bytes: bool = True):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        if include_bytes:
+            self.bytes_accessed += other.bytes_accessed * mult
+        for c in COLLECTIVES:
+            self.coll_operand[c] += other.coll_operand[c] * mult
+            self.coll_link[c] += other.coll_link[c] * mult
+            self.coll_counts[c] += other.coll_counts[c] * mult
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(self.coll_operand.values())
+
+    @property
+    def collective_link_bytes(self) -> float:
+        return sum(self.coll_link.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "transcendentals": self.transcendentals,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "coll_operand": dict(self.coll_operand),
+            "coll_link": dict(self.coll_link),
+            "coll_counts": dict(self.coll_counts),
+        }
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        body: List[str] = []
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(2)
+                    if m.group(1):
+                        self.entry = cur
+                    body = []
+            else:
+                if line.startswith("}"):
+                    self.computations[cur] = body
+                    cur = None
+                else:
+                    body.append(line)
+        self._symbols: Dict[str, Dict[str, str]] = {}
+        self._cost_cache: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------ #
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        if comp not in self._symbols:
+            tab: Dict[str, str] = {}
+            for line in self.computations.get(comp, ()):
+                m = _OP_RE.match(line)
+                if m:
+                    tab[m.group(1)] = m.group(2)
+            self._symbols[comp] = tab
+        return self._symbols[comp]
+
+    # ------------------------------------------------------------------ #
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._cost_cache:
+            return self._cost_cache[comp]
+        self._cost_cache[comp] = Cost()  # cycle guard
+        total = Cost()
+        tab = self._symtab(comp)
+        for line in self.computations.get(comp, ()):
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode, tail = m.groups()
+            c = Cost()
+            relems, rbytes = _shape_elems_bytes(rtype)
+
+            if opcode == "dot":
+                cm = _CONTRACT_RE.search(tail)
+                k = 1
+                if cm:
+                    ops = _OPERAND_RE.findall(tail.split(")")[0])
+                    lhs_shape = tab.get(ops[0], "") if ops else ""
+                    sm = _SHAPE_RE.search(lhs_shape)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for idx in cm.group(1).split(","):
+                            if idx:
+                                k *= dims[int(idx)]
+                c.flops = 2.0 * relems * k
+                c.bytes_accessed = rbytes + self._operand_bytes(tail, tab)
+            elif opcode in _ELEMENTWISE:
+                c.flops = float(relems)
+                c.bytes_accessed = rbytes + self._operand_bytes(tail, tab)
+            elif opcode in _TRANSCENDENTAL:
+                c.flops = float(relems)
+                c.transcendentals = float(relems)
+                c.bytes_accessed = rbytes + self._operand_bytes(tail, tab)
+            elif opcode == "reduce":
+                c.flops = float(self._operand_elems(tail, tab))
+                c.bytes_accessed = rbytes + self._operand_bytes(tail, tab)
+            elif opcode in COLLECTIVES or opcode.rstrip("-start") in COLLECTIVES:
+                op_clean = opcode[:-6] if opcode.endswith("-start") else opcode
+                ob = self._operand_bytes(tail, tab)
+                c.bytes_accessed = rbytes + ob
+                c.coll_operand[op_clean] = ob
+                c.coll_counts[op_clean] = 1.0
+                link = {"all-gather": rbytes, "reduce-scatter": ob,
+                        "all-reduce": 2.0 * ob, "all-to-all": ob,
+                        "collective-permute": ob}[op_clean]
+                c.coll_link[op_clean] = link
+            elif opcode in ("fusion", "call", "map"):
+                cm = _CALL_ATTR.search(tail)
+                if cm:
+                    # flops/collectives from the body; HBM traffic is the
+                    # fusion boundary (operands + result), not its internals
+                    c.add(self.cost(cm.group(1)), include_bytes=(opcode != "fusion"))
+                c.bytes_accessed += rbytes + self._operand_bytes(tail, tab)
+            elif opcode == "while":
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _CALL_ATTR.search(tail)
+                condm = _COND_ATTR.search(tail)
+                if bm:
+                    c.add(self.cost(bm.group(1)), trip)
+                if condm:
+                    c.add(self.cost(condm.group(1)), trip)
+            elif opcode == "conditional":
+                for cname in re.findall(r"%([\w.\-]+)", tail.split("),")[-1]):
+                    if cname in self.computations:
+                        c.add(self.cost(cname))
+            elif opcode in ("copy", "transpose", "broadcast", "reshape",
+                            "bitcast", "convert", "slice", "dynamic-slice",
+                            "dynamic-update-slice", "gather", "scatter",
+                            "concatenate", "pad", "iota", "reverse", "sort",
+                            "reduce-window", "select-and-scatter"):
+                c.bytes_accessed = rbytes + self._operand_bytes(tail, tab)
+            # parameters, constants, tuples, get-tuple-element: free
+            total.add(c)
+        self._cost_cache[comp] = total
+        return total
+
+    # ------------------------------------------------------------------ #
+    def _operand_bytes(self, tail: str, tab: Dict[str, str]) -> float:
+        return float(sum(
+            _shape_elems_bytes(tab.get(o, ""))[1]
+            for o in _OPERAND_RE.findall(tail.split(")")[0])
+        ))
+
+    def _operand_elems(self, tail: str, tab: Dict[str, str]) -> float:
+        return float(sum(
+            _shape_elems_bytes(tab.get(o, ""))[0]
+            for o in _OPERAND_RE.findall(tail.split(")")[0])
+        ))
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    return mod.cost().as_dict()

@@ -1,0 +1,148 @@
+"""Roofline analysis over the dry-run artifacts (TPU v5e model).
+
+Per (arch x shape x mesh) cell, from experiments/dryrun/*.json:
+
+  compute    = HLO_FLOPs/dev / 197e12          (bf16 MXU peak per chip)
+  memory     = HLO_bytes/dev / 819e9           (HBM bandwidth per chip)
+  collective = collective_operand_bytes/dev / 50e9   (ICI per-link, spec model)
+
+plus MODEL_FLOPS (6*N*D train / 2*N*D prefill / 2*N*B decode, N = active
+matmul params), the useful-compute ratio MODEL_FLOPS/HLO_FLOPs, and the
+roofline fraction = (MODEL_FLOPS-time) / (dominant-term time) — the
+score we hillclimb in EXPERIMENTS.md §Perf.  For decode (memory-bound by
+construction) we additionally report min_bytes/HLO_bytes where min_bytes =
+(active params + touched cache)/chips — the right "roofline fraction" for a
+bandwidth-bound step.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod1] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPE_TOKENS = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+
+def model_flops(arch: str, shape: str, kind: str) -> float:
+    from ..configs import get_config
+    from ..models.model import matmul_params
+
+    cfg = get_config(arch)
+    n = matmul_params(cfg, active_only=True)
+    S, B = SHAPE_TOKENS[shape]
+    if kind == "train":
+        return 6.0 * n * S * B
+    if kind == "prefill":
+        return 2.0 * n * S * B
+    return 2.0 * n * B  # decode: one token per sequence
+
+
+def cache_bytes(arch: str, shape: str) -> float:
+    """Decode-cache bytes actually touched per step (global)."""
+    from ..configs import get_config
+    from ..launch.specs import input_specs
+
+    cfg = get_config(arch)
+    kind, model, args = input_specs(cfg, shape)
+    if kind != "decode":
+        return 0.0
+    import jax
+    import math
+
+    cache = args[1]
+    return float(sum(
+        math.prod(l.shape) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(cache)
+    ))
+
+
+def analyze_cell(rec: dict) -> dict:
+    arch, shape, kind = rec["arch"], rec["shape"], rec["kind"]
+    n_dev = rec["n_devices"]
+    h = rec["hlo"]
+    t_comp = h["flops"] / PEAK_FLOPS
+    t_mem = h["bytes_accessed"] / HBM_BW
+    t_coll = h["collective_operand_bytes"] / LINK_BW
+    t_coll_link = h["collective_link_bytes"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape, kind)
+    useful_ratio = mf / (h["flops"] * n_dev) if h["flops"] else 0.0
+    t_useful = mf / n_dev / PEAK_FLOPS
+    frac = t_useful / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    out = {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"], "kind": kind,
+        "quant": rec.get("quant", "none"), "tag": rec.get("tag", ""),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_collective_link_s": t_coll_link,
+        "dominant": dominant,
+        "model_flops": mf, "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": frac,
+    }
+    if kind == "decode":
+        from ..configs import get_config
+        from ..models.model import count_params
+
+        cfg = get_config(arch)
+        n_active = count_params(cfg, active_only=True)
+        min_bytes = (2.0 * n_active + cache_bytes(arch, shape)) / n_dev
+        out["mem_fraction"] = min_bytes / h["bytes_accessed"] if h["bytes_accessed"] else 0.0
+    return out
+
+
+def load_cells(mesh: str = "pod1", quant: str = "none", tag: str = ""):
+    cells = []
+    for p in sorted(OUT_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec["mesh"] == mesh and rec.get("quant", "none") == quant and rec.get("tag", "") == tag:
+            cells.append(analyze_cell(rec))
+    return cells
+
+
+def fmt_table(cells) -> str:
+    hdr = (
+        "| arch | shape | comp (s) | mem (s) | coll (s) | dominant | "
+        "MODEL_FLOPS | useful/HLO | roofline-frac | mem-frac |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for c in cells:
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute_s']:.3g} | "
+            f"{c['t_memory_s']:.3g} | {c['t_collective_s']:.3g} | "
+            f"**{c['dominant']}** | {c['model_flops']:.3g} | "
+            f"{c['useful_flops_ratio']:.3f} | {c['roofline_fraction']:.3f} | "
+            f"{c.get('mem_fraction', float('nan')):.3f} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.mesh, args.quant)
+    table = fmt_table(cells)
+    print(table)
+    if args.md:
+        pathlib.Path(args.md).write_text(table)
+
+
+if __name__ == "__main__":
+    main()

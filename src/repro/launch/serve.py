@@ -1,0 +1,139 @@
+"""Serving driver: batched prefill + decode with continuous batching.
+
+A fixed pool of batch slots; finished sequences (EOS or budget) release
+their slot and the next queued request is prefilled into it.  Greedy or
+temperature sampling.  CPU smoke scale:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --requests 6 --slots 2 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import Model
+
+
+class Engine:
+    def __init__(self, cfg, *, slots: int, max_seq: int, rng_seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg, max_seq=max_seq)
+        self.max_seq = max_seq
+        self.slots = slots
+        self.params = self.model.init(jax.random.PRNGKey(rng_seed))
+        self.cache = self.model.make_cache(slots, max_seq)
+        self._decode = jax.jit(self.model.decode_step)
+        # per-slot single-row prefill writes into the shared cache
+        self._prefill1 = jax.jit(self.model.prefill)
+
+    def prefill_slot(self, slot: int, prompt: np.ndarray):
+        """Run a 1-row prefill and splice its cache into the slot."""
+        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+        if self.cfg.family == "vlm":
+            batch["img"] = jnp.zeros((1, self.cfg.n_img_tokens, self.cfg.d_model), jnp.float32)
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((1, self.cfg.enc_context, self.cfg.d_model), jnp.float32)
+        logits, small = self._prefill1(self.params, batch)
+        plen = prompt.shape[0]
+
+        # splice the 1-row prefill cache into the slot: write new (shorter
+        # prefix) values at [.., slot, :plen_or_full, ..]; structures match.
+        def write(big, new):
+            sl = [slice(None)] * big.ndim
+            # prefix caches: batch first; stacked block caches: [NB, batch, ..]
+            batch_ax = 0 if (new.shape[0] == 1 and big.shape[0] == self.slots) else 1
+            sl[batch_ax] = slice(slot, slot + 1)
+            for ax in range(batch_ax + 1, big.ndim):
+                if new.shape[ax] != big.shape[ax]:
+                    sl[ax] = slice(0, new.shape[ax])
+            return big.at[tuple(sl)].set(new.astype(big.dtype))
+
+        self.cache = jax.tree.map(write, self.cache, small)
+        return int(np.argmax(np.asarray(logits[0, : self.cfg.vocab]))), plen
+
+    def decode(self, tokens: np.ndarray, pos: int):
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32), jnp.int32(pos)
+        )
+        return np.asarray(logits[:, : self.cfg.vocab])
+
+
+def sample(logits: np.ndarray, temperature: float, rng: np.random.Generator):
+    if temperature <= 0:
+        return logits.argmax(-1)
+    z = logits / temperature
+    z = z - z.max(-1, keepdims=True)
+    p = np.exp(z)
+    p /= p.sum(-1, keepdims=True)
+    return np.array([rng.choice(len(row), p=row) for row in p])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke, quant=args.quant)
+    max_seq = args.prompt_len + args.gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    eng = Engine(cfg, slots=args.slots, max_seq=max_seq, rng_seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+
+    queue = [rng.integers(0, cfg.vocab, size=args.prompt_len) for _ in range(args.requests)]
+    img_off = cfg.n_img_tokens if cfg.family == "vlm" else 0
+    active = {}  # slot -> dict(request_id, pos, tokens, last)
+    outputs = {}
+    next_req = 0
+    t0 = time.time()
+    steps = 0
+
+    while len(outputs) < args.requests:
+        # admit
+        for slot in range(args.slots):
+            if slot not in active and next_req < args.requests:
+                first, plen = eng.prefill_slot(slot, queue[next_req])
+                active[slot] = dict(rid=next_req, pos=img_off + plen,
+                                    out=[first], last=first)
+                next_req += 1
+        # one decode step for the whole pool
+        toks = np.zeros((args.slots,), np.int32)
+        for slot, st in active.items():
+            toks[slot] = st["last"]
+        pos = max(st["pos"] for st in active.values())
+        logits = eng.decode(toks, pos)
+        steps += 1
+        nxt = sample(logits, args.temperature, rng)
+        done = []
+        for slot, st in list(active.items()):
+            st["last"] = int(nxt[slot])
+            st["out"].append(st["last"])
+            st["pos"] += 1
+            if len(st["out"]) >= args.gen:
+                outputs[st["rid"]] = st["out"]
+                done.append(slot)
+        for slot in done:
+            del active[slot]
+
+    dt = time.time() - t0
+    print(f"[serve] {args.requests} requests, {steps} decode steps, "
+          f"{steps * args.slots / dt:.1f} tok/s (pool)")
+    for rid in sorted(outputs):
+        print(f"  req{rid}: {outputs[rid][:10]}...")
+    return outputs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation ever happens here: states/params/caches come from
+``jax.eval_shape`` over the real constructors, so the dry-run lowers the
+exact same pytrees the runtime would use.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES
+from ..models import Model
+from ..optim import adamw
+from ..runtime import steps
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg, seq_len: int, batch: int) -> Dict[str, Any]:
+    b: Dict[str, Any] = {
+        "tokens": sds((batch, seq_len), jnp.int32),
+        "labels": sds((batch, seq_len), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["frames"] = sds((batch, cfg.enc_context, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        b["img"] = sds((batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    return b
+
+
+def input_specs(cfg, shape_name: str) -> Tuple[str, Model, Tuple]:
+    """Returns (kind, model, args_sds) for the step to lower."""
+    sh = SHAPES[shape_name]
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    model = Model(cfg, max_seq=S)
+
+    if kind == "train":
+        state = jax.eval_shape(
+            lambda: steps.make_train_state(model, jax.random.PRNGKey(0))
+        )
+        batch = batch_specs(cfg, S, B)
+        return kind, model, (state, batch)
+
+    def make_params():
+        params = model.init(jax.random.PRNGKey(0))
+        if cfg.quant.static_weights:
+            from ..models.quantize import quantize_params
+
+            params = quantize_params(params, cfg.quant.weight_fmt)
+        return params
+
+    params = jax.eval_shape(make_params)
+    if kind == "prefill":
+        batch = batch_specs(cfg, S, B)
+        batch.pop("labels")
+        return kind, model, (params, batch)
+
+    assert kind == "decode"
+    cache = jax.eval_shape(lambda: model.make_cache(B, S))
+    tokens = sds((B,), jnp.int32)
+    pos = sds((), jnp.int32)
+    return kind, model, (params, cache, tokens, pos)

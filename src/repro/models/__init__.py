@@ -1,0 +1,4 @@
+"""Model zoo: composable layers + the 10 assigned architectures."""
+from .model import Model, count_params, matmul_params
+
+__all__ = ["Model", "count_params", "matmul_params"]

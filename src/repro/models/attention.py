@@ -1,0 +1,224 @@
+"""Attention modules: GQA (with qk-norm, softcap, sliding window) and MLA.
+
+Each module provides ``init(rng, cfg)``, ``forward(...)`` for full-sequence
+(train/prefill) and ``decode(...)`` for single-token cache attention.
+
+Caches:
+  * GQA:  {"k": [B, S, KV, hd], "v": [B, S, KV, dv]}
+  * MLA:  {"ckv": [B, S, lora], "kpe": [B, S, rope]}  (compressed — the point
+    of MLA; decode uses the absorbed-matrices formulation)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import encode as fp8_encode
+from ..kernels.common import code_to_f32
+from .layers import (
+    chunked_attention,
+    decode_attention,
+    qk_rms_norm,
+    qlinear,
+    rms_norm,
+    rope,
+    softcap,
+)
+
+
+def _kv_store(x, cfg):
+    """To cache representation (E5M2 codes when quant.kv_cache_fp8)."""
+    if cfg.quant.kv_cache_fp8:
+        return fp8_encode(x.astype(jnp.float32), cfg.quant.kv_fmt)
+    return x
+
+
+def _kv_load(x, cfg):
+    if cfg.quant.kv_cache_fp8:
+        return code_to_f32(x, cfg.quant.kv_fmt)
+    return x
+
+
+def _init(rng, shape, dtype, scale=0.02):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------------- #
+def gqa_init(rng, cfg):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _init(ks[0], (D, H * hd), dt),
+        "wk": _init(ks[1], (D, KV * hd), dt),
+        "wv": _init(ks[2], (D, KV * hd), dt),
+        "wo": _init(ks[3], (H * hd, D), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _gqa_qkv(p, x, cfg, positions, use_rope=True):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = qlinear(x, p["wq"], cfg.quant, p.get("bq")).reshape(B, S, H, hd)
+    k = qlinear(x, p["wk"], cfg.quant, p.get("bk")).reshape(B, S, KV, hd)
+    v = qlinear(x, p["wv"], cfg.quant, p.get("bv")).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = qk_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = qk_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, *, is_global: bool, positions, cross_kv=None,
+                causal=True, use_rope=True, q_chunk=512, kv_chunk=1024):
+    """Full-sequence attention. Returns (out, cache_entries)."""
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_rope)
+    window = 0 if is_global else cfg.window
+    if cross_kv is not None:  # enc-dec cross attention uses given k/v
+        k, v = cross_kv
+        out = chunked_attention(q, k, v, causal=False, cap=cfg.attn_softcap,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                cap=cfg.attn_softcap,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B, S, _, _ = q.shape
+    y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.quant)
+    return y, {"k": _kv_store(k, cfg), "v": _kv_store(v, cfg)}
+
+
+def gqa_decode(p, x, cfg, *, is_global: bool, cache, pos, cross_kv=None,
+               use_rope=True):
+    """x: [B, 1, D]; cache k/v: [B, S, KV, hd]; pos: scalar position index."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = decode_attention(q, k, v, pos=k.shape[1] - 1, cap=cfg.attn_softcap)
+        new_cache = cache
+    else:
+        k_c = _kv_store(k_new, cfg) if cfg.quant.kv_cache_fp8 else k_new.astype(cache["k"].dtype)
+        v_c = _kv_store(v_new, cfg) if cfg.quant.kv_cache_fp8 else v_new.astype(cache["v"].dtype)
+        W = cache["k"].shape[1]
+        window = 0 if is_global else cfg.window
+        ring = bool(window) and W <= window  # ring buffer cache
+        write = jax.lax.rem(pos, W) if ring else pos
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_c, write, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_c, write, axis=1)
+        out = decode_attention(q, _kv_load(k, cfg), _kv_load(v, cfg),
+                               pos=pos, window=0 if ring else window,
+                               cap=cfg.attn_softcap, ring=ring)
+        new_cache = {"k": k, "v": v}
+    y = qlinear(out.reshape(B, 1, -1), p["wo"], cfg.quant)
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek-V2)
+# --------------------------------------------------------------------------- #
+def mla_init(rng, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, L = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    dt = cfg.pdtype
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": _init(ks[0], (D, H * (dn + dr)), dt),
+        "w_dkv": _init(ks[1], (D, L + dr), dt),
+        "kv_norm": jnp.zeros((L,), dt),
+        "w_uk": _init(ks[2], (L, H * dn), dt),
+        "w_uv": _init(ks[3], (L, H * dv), dt),
+        "wo": _init(ks[4], (H * dv, D), dt),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = qlinear(x, p["wq"], cfg.quant).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_latent(p, x, cfg, positions):
+    B, S, D = x.shape
+    L, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    dkv = qlinear(x, p["w_dkv"], cfg.quant)
+    ckv = rms_norm(dkv[..., :L], p["kv_norm"], cfg.norm_eps)
+    kpe = rope(dkv[..., L:].reshape(B, S, 1, dr), positions, cfg.rope_theta)
+    return ckv, kpe.reshape(B, S, dr)
+
+
+def mla_forward(p, x, cfg, *, positions, q_chunk=512, kv_chunk=1024, **_):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, L = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv, kpe = _mla_latent(p, x, cfg, positions)
+    # Expanded keys/values (train/prefill path)
+    k_nope = qlinear(ckv, p["w_uk"], cfg.quant).reshape(B, S, H, dn)
+    v = qlinear(ckv, p["w_uv"], cfg.quant).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, dr))], axis=-1)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.quant)
+    return y, {"ckv": ckv, "kpe": kpe}
+
+
+def mla_decode(p, x, cfg, *, cache, pos, **_):
+    """Absorbed-matrices decode: attention directly in the latent space."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, L = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)  # [B,1,H,dn],[B,1,H,dr]
+    ckv_new, kpe_new = _mla_latent(p, x, cfg, positions)
+    if cfg.quant.kv_cache_fp8:
+        ckv_new, kpe_new = _kv_store(ckv_new, cfg), _kv_store(kpe_new, cfg)
+    else:
+        ckv_new = ckv_new.astype(cache["ckv"].dtype)
+        kpe_new = kpe_new.astype(cache["kpe"].dtype)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    kpe = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe_new, pos, axis=1)
+    cache = {"ckv": ckv, "kpe": kpe}
+    ckv, kpe = _kv_load(ckv, cfg), _kv_load(kpe, cfg)
+    S = ckv.shape[1]
+
+    from .quantize import resolve_weight
+
+    w_uk = resolve_weight(p["w_uk"], cfg.quant.weight_fmt, x.dtype).reshape(L, H, dn)
+    # absorb: q_eff[b,h,l] = sum_d q_nope[b,h,d] * w_uk[l,h,d]
+    q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = jnp.einsum("bhl,bsl->bhs", q_eff, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_pe[:, 0].astype(jnp.float32),
+                       kpe.astype(jnp.float32))
+    s = s * (dn + dr) ** -0.5
+    t = jnp.arange(S)
+    s = jnp.where((t <= pos)[None, None, :], s, -2.0e30)
+    m = s.max(-1, keepdims=True)
+    pattn = jnp.exp(s - m)
+    den = pattn.sum(-1, keepdims=True)
+    lat = jnp.einsum("bhs,bsl->bhl", pattn / jnp.maximum(den, 1e-37),
+                     ckv.astype(jnp.float32))
+    w_uv = resolve_weight(p["w_uv"], cfg.quant.weight_fmt, x.dtype).reshape(L, H, dv)
+    out = jnp.einsum("bhl,lhv->bhv", lat, w_uv.astype(jnp.float32))
+    y = qlinear(out.reshape(B, 1, H * dv).astype(x.dtype), p["wo"], cfg.quant)
+    return y, cache

@@ -1,0 +1,328 @@
+"""Model building blocks: norms, rope, attention, MLPs, quantized linear.
+
+Everything is a pure function over parameter pytrees (dicts of jnp arrays);
+no framework objects.  All shapes are static => usable under jax.eval_shape
+for the 512-device dry-run.
+
+The paper's technique enters through :func:`qlinear`: when
+``cfg.quant.enabled`` every matmul quantizes activations (E5M2) and weights
+(E4M3) to FP8 codes and multiplies in the LNS integer domain (Pallas kernel
+on TPU, XLA dequant path for CPU lowering), with a straight-through
+estimator for gradients (standard FP8 training recipe).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import quantize
+from ..kernels import ops as kops
+from ..parallel.hints import hint_meta
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def qk_rms_norm(x, scale, eps=1e-6):
+    """Per-head RMSNorm over head_dim (qwen3/gemma3 style)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# --------------------------------------------------------------------------- #
+# Quantized / plain linear
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _ste_qmatmul(x2d, w, act_fmt, weight_fmt, impl, act_quant=True):
+    qw = quantize(w, weight_fmt, axis=-1)
+    if act_quant:
+        qx = quantize(x2d, act_fmt)
+        return kops.matmul_q(qx, qw, impl=impl)
+    # weight-only: dequantize w, keep activations in compute dtype
+    from .quantize import resolve_weight
+
+    wq = resolve_weight({"codes": qw.codes, "scale": qw.scale}, weight_fmt, x2d.dtype)
+    return (x2d @ wq).astype(jnp.float32)
+
+
+def _ste_fwd(x2d, w, act_fmt, weight_fmt, impl, act_quant=True):
+    return _ste_qmatmul(x2d, w, act_fmt, weight_fmt, impl, act_quant), (x2d, w)
+
+
+def _ste_bwd(act_fmt, weight_fmt, impl, act_quant, res, g):
+    x2d, w = res
+    g = g.astype(w.dtype)
+    return (g @ w.T).astype(x2d.dtype), (x2d.T @ g).astype(w.dtype)
+
+
+_ste_qmatmul.defvjp(_ste_fwd, _ste_bwd)
+
+
+def qlinear(x, w, qcfg, b=None):
+    """[..., D_in] @ [D_in, D_out]; FP8-LNS path when qcfg.enabled.
+
+    ``w`` may be a static-quantized {"codes", "scale"} dict (weight-only
+    FP8): it is decoded by integer bit placement right before the matmul,
+    so only 1 byte/param crosses HBM.
+    """
+    if isinstance(w, dict) and "codes" in w:
+        from .quantize import resolve_weight
+
+        w = resolve_weight(w, qcfg.weight_fmt if qcfg else "e4m3", x.dtype)
+    if qcfg is None or not qcfg.enabled:
+        y = x @ w
+    else:
+        shape = x.shape
+        x2d = x.reshape(-1, shape[-1])
+        y = _ste_qmatmul(x2d, w, qcfg.act_fmt, qcfg.weight_fmt,
+                         qcfg.matmul_impl, qcfg.act_quant)
+        y = y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# --------------------------------------------------------------------------- #
+# Gated MLP
+# --------------------------------------------------------------------------- #
+def _act(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x, approximate=True)
+
+
+def gated_mlp(x, p, qcfg, act_fn="silu"):
+    """SwiGLU/GeGLU: down( act(gate(x)) * up(x) ).
+
+    With qcfg.elementwise the gate*up product runs through the paper's FP8
+    LNS multiply (kernels.fp8_elementwise) instead of an f32 multiply.
+    """
+    g = _act(qlinear(x, p["w_gate"], qcfg), act_fn)
+    u = qlinear(x, p["w_up"], qcfg)
+    if qcfg is not None and qcfg.enabled and qcfg.elementwise:
+        qg = quantize(g, qcfg.act_fmt)
+        qu = quantize(u, qcfg.act_fmt)
+        h = kops.elementwise_q("mul", qg, qu, mode=qcfg.mode).dequantize().astype(x.dtype)
+    else:
+        h = g * u
+    return qlinear(h, p["w_down"], qcfg)
+
+
+# --------------------------------------------------------------------------- #
+# Attention (chunked, online softmax: flash-style in pure JAX)
+# --------------------------------------------------------------------------- #
+NEG_INF = -2.0e30
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """[Sq, Sk] additive bias from position indices."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal=True, window=0, cap=0.0, q_offset=0,
+    q_chunk=512, kv_chunk=1024, k_len: Optional[jnp.ndarray] = None,
+):
+    """GQA attention, O(q_chunk*kv_chunk) memory.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd] with H % KV == 0.
+    ``q_offset``: position of q[0] in the kv sequence (prefill continuation).
+    ``k_len``: optional dynamic valid kv length (decode against a cache).
+    """
+    B, Sq0, H, hd = q.shape
+    _, Sk0, KV, _ = k.shape
+    dv = v.shape[-1]
+    G = H // KV
+    # Pad the sequence up to a chunk multiple instead of shrinking chunks to
+    # a divisor: ragged lengths (llava's 4096+576, whisper's 1500) previously
+    # forced 64-wide chunks (33344 = 2^6 x 521), inflating op count and
+    # intermediate HBM traffic ~8x.  Padded k rows are masked via k_len;
+    # padded q rows are computed and sliced off.
+    sp = hint_meta("sp")
+    use_sp = bool(sp) and Sq0 % sp == 0 and Sk0 % sp == 0 and Sq0 // sp >= 16
+    if use_sp:
+        q_chunk = min(q_chunk, Sq0 // sp)
+        kv_chunk = min(kv_chunk, Sk0 // sp)
+    q_chunk = min(q_chunk, Sq0)
+    kv_chunk = min(kv_chunk, Sk0)
+    pad_q = (-Sq0) % q_chunk
+    pad_k = (-Sk0) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_len = jnp.asarray(Sk0) if k_len is None else jnp.minimum(k_len, Sk0)
+    Sq, Sk = Sq0 + pad_q, Sk0 + pad_k
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    if use_sp:
+        out = _attention_sp(
+            q, k, v, causal=causal, window=window, cap=cap, q_offset=q_offset,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, k_len=k_len,
+        )
+        return out[:, :Sq0]
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, dv)
+    scale = hd ** -0.5
+
+    def q_step(qi_and_chunk):
+        qi, qb = qi_and_chunk  # qb: [B, q_chunk, KV, G, hd]
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_and_kv):
+            m, l, acc = carry
+            kj, kb, vb = kj_and_kv
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqkgd,btkd->bkgqt", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            ) * scale
+            s = softcap(s, cap)
+            bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+            if k_len is not None:
+                bias = bias + jnp.where(k_pos[None, :] < k_len, 0.0, NEG_INF)
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, dv), jnp.float32)
+        ks = (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), ks)
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return out  # [B, KV, G, q_chunk, hd]
+
+    outs = jax.lax.map(q_step, (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    # outs: [nq, B, KV, G, q_chunk, hd] -> [B, Sq, H, hd]
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 2, 3, 1, 4, 5)
+    out = out.reshape(B, KV * G, Sq, dv).transpose(0, 2, 1, 3).astype(q.dtype)
+    return out[:, :Sq0]
+
+
+def _attention_sp(
+    q, k, v, *, causal, window, cap, q_offset, q_chunk, kv_chunk, k_len,
+):
+    """Sequence-parallel attention: q-chunk dim vectorized (sharded over
+    ``model``), online-softmax scan over kv chunks.  Per-device score
+    memory is B * (Sq/sp) * kv_chunk * H_local."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    dv = v.shape[-1]
+    G = H // KV
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)  # nq sharded over model
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, KV, dv), 1, 0)
+    scale = hd**-0.5
+    q_pos = q_offset + (
+        jnp.arange(nq)[:, None] * q_chunk + jnp.arange(q_chunk)[None, :]
+    )  # [nq, q_chunk]
+
+    def kv_step(carry, kj_and_kv):
+        m, l, acc = carry  # [B, nq, KV, G, q_chunk(, dv)]
+        kj, kb, vb = kj_and_kv
+        k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "bnqkgd,btkd->bnkgqt", qc.astype(jnp.float32), kb.astype(jnp.float32)
+        ) * scale
+        s = softcap(s, cap)
+        ok = jnp.ones((nq, q_chunk, kv_chunk), bool)
+        if causal:
+            ok &= q_pos[:, :, None] >= k_pos[None, None, :]
+        if window:
+            ok &= q_pos[:, :, None] - k_pos[None, None, :] < window
+        bias = jnp.where(ok, 0.0, NEG_INF)
+        if k_len is not None:
+            bias = bias + jnp.where(k_pos < k_len, 0.0, NEG_INF)[None, None, :]
+        s = s + bias[None, :, None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bnkgqt,btkd->bnkgqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, KV, G, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, KV, G, q_chunk), jnp.float32)
+    a0 = jnp.zeros((B, nq, KV, G, q_chunk, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]  # [B, nq, KV, G, q_chunk, dv]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, KV * G, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, pos, window=0, cap=0.0, ring=False):
+    """Single-position attention against a full-length cache.
+
+    q: [B, 1, H, hd]; k/v: [B, S, KV, hd]; ``pos``: current position (the
+    number of valid cache entries).  Two-pass stable softmax keeps the
+    reduction explicit so a sequence-sharded cache (SP/flash-decoding) turns
+    the max/sum into cheap collectives under pjit.
+    """
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    dv = v.shape[-1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * hd**-0.5
+    s = softcap(s, cap)
+    t = jnp.arange(S)
+    if ring:
+        # ring cache of length S: all slots valid once pos >= S - 1
+        ok = (t[None, :] <= pos) | (pos >= S)
+    else:
+        ok = t[None, :] <= pos
+        if window:
+            ok &= (pos - t[None, :]) < window
+    s = jnp.where(ok[:, None, None, :].reshape(1, 1, 1, S), s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    num = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    den = p.sum(-1, keepdims=True)
+    out = (num / jnp.maximum(den, 1e-37)).reshape(B, 1, H, dv)
+    return out.astype(q.dtype)

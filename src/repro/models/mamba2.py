@@ -1,0 +1,174 @@
+"""Mamba2 SSD (state-space duality) mixer: chunked parallel scan + decode.
+
+Follows the minimal-SSD formulation of the Mamba2 paper, adapted:
+  * single B/C group (n_groups = 1),
+  * chunked quadratic intra-chunk attention + inter-chunk state recurrence,
+  * short causal depthwise conv over (x, B, C) channels,
+  * gated RMSNorm before out_proj.
+
+Projections are kept as separate parameters (w_z / w_x / w_B / w_C / w_dt)
+rather than one fused in_proj so tensor-parallel sharding boundaries align
+with the semantic splits (z and x shard over heads on the ``model`` axis;
+the small B/C/dt projections replicate).  State math is f32 (exp decays
+underflow in bf16); projections honour the FP8-LNS quantized path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import qlinear, rms_norm
+
+
+def dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(rng, cfg):
+    D = cfg.d_model
+    di, nh, P, N = dims(cfg)
+    w = cfg.ssm_conv_width
+    dt = cfg.pdtype
+    ks = jax.random.split(rng, 8)
+    s = 0.02
+    return {
+        "w_z": (jax.random.normal(ks[0], (D, di), jnp.float32) * s).astype(dt),
+        "w_x": (jax.random.normal(ks[1], (D, di), jnp.float32) * s).astype(dt),
+        "w_B": (jax.random.normal(ks[2], (D, N), jnp.float32) * s).astype(dt),
+        "w_C": (jax.random.normal(ks[3], (D, N), jnp.float32) * s).astype(dt),
+        "w_dt": (jax.random.normal(ks[4], (D, nh), jnp.float32) * s).astype(dt),
+        "conv_x": (jax.random.normal(ks[5], (w, di), jnp.float32) * 0.1).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (w, N), jnp.float32) * 0.1).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (w, N), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * N,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "Dskip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": (jax.random.normal(jax.random.fold_in(rng, 9), (di, D), jnp.float32) * s).astype(dt),
+    }
+
+
+def _proj(p, x, cfg):
+    """x [B,S,D] -> z [B,S,di], xc/Bc/Cc (pre-conv), dt_raw [B,S,nh]."""
+    z = qlinear(x, p["w_z"], cfg.quant)
+    xc = qlinear(x, p["w_x"], cfg.quant)
+    Bc = qlinear(x, p["w_B"], cfg.quant)
+    Cc = qlinear(x, p["w_C"], cfg.quant)
+    dtr = qlinear(x, p["w_dt"], cfg.quant)
+    return z, xc, Bc, Cc, dtr
+
+
+def _conv_seq(x, w, width):
+    """Causal depthwise conv along seq (stacked shifts), per channel."""
+    pads = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(
+        pads[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+
+
+def ssd_forward(p, x, cfg, chunk: int = 128) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence SSD. Returns (y [B,S,D], cache{conv,state} at seq end)."""
+    B, S, D = x.shape
+    di, nh, P, N = dims(cfg)
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    w = cfg.ssm_conv_width
+
+    z, xc_raw, Bc_raw, Cc_raw, dtr = _proj(p, x, cfg)
+    bias = p["conv_b"]
+    xc = jax.nn.silu(_conv_seq(xc_raw, p["conv_x"], w) + bias[None, None, :di])
+    Bc = jax.nn.silu(_conv_seq(Bc_raw, p["conv_B"], w) + bias[None, None, di : di + N])
+    Cc = jax.nn.silu(_conv_seq(Cc_raw, p["conv_C"], w) + bias[None, None, di + N :])
+
+    xs = xc.reshape(B, nc, chunk, nh, P).astype(jnp.float32)
+    Bm = Bc.reshape(B, nc, chunk, N).astype(jnp.float32)
+    Cm = Cc.reshape(B, nc, chunk, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"]).reshape(B, nc, chunk, nh)
+    A = -jnp.exp(p["A_log"])  # [nh], negative
+
+    dA = dt * A  # [B,nc,L,nh]
+    cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (i >= j): decay(i,j) = exp(cum_i - cum_j)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,L,L,nh]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", cb, decay, dt, xs)
+
+    # chunk end-states: state_c = sum_j B_j (dt_j x_j) exp(cum_end - cum_j)
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,L,nh]
+    states = jnp.einsum("bcjn,bcjh,bcjh,bcjhp->bchpn", Bm, decay_end, dt, xs)
+
+    # inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,nh]
+
+    def step(s_prev, inp):
+        st, cd = inp  # [B,h,p,n], [B,h]
+        s_new = s_prev * cd[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B, nh, P, N), jnp.float32)
+    s_last, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # [B,nc,h,p,n] entering each chunk
+
+    # off-diagonal: y_i += C_i . (exp(cum_i) * S_prev)
+    in_decay = jnp.exp(cum)  # [B,nc,L,nh]
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cm, in_decay, s_prevs)
+
+    y = (y_diag + y_off + xs * p["Dskip"][None, None, None, :, None]).reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
+    y = qlinear(y.astype(x.dtype), p["out_proj"], cfg.quant)
+
+    # conv cache: last (w-1) *pre-activation* conv inputs, concatenated
+    conv_cache = jnp.concatenate(
+        [xc_raw[:, S - (w - 1) :], Bc_raw[:, S - (w - 1) :], Cc_raw[:, S - (w - 1) :]],
+        axis=-1,
+    )
+    return y, {"conv": conv_cache, "state": s_last}
+
+
+def ssd_decode(p, x, cfg, cache) -> Tuple[jnp.ndarray, dict]:
+    """One token: x [B, 1, D]; cache {conv [B, w-1, di+2N], state [B,h,p,n]}."""
+    B = x.shape[0]
+    di, nh, P, N = dims(cfg)
+    w = cfg.ssm_conv_width
+
+    z, xc_raw, Bc_raw, Cc_raw, dtr = _proj(p, x, cfg)
+    new_raw = jnp.concatenate([xc_raw, Bc_raw, Cc_raw], axis=-1)  # [B,1,di+2N]
+    hist = jnp.concatenate([cache["conv"], new_raw], axis=1)  # [B, w, ch]
+    bias = p["conv_b"]
+    hx, hB, hC = hist[..., :di], hist[..., di : di + N], hist[..., di + N :]
+    xc = jax.nn.silu(
+        sum(hx[:, i] * p["conv_x"][i][None, :] for i in range(w)) + bias[None, :di]
+    )
+    Bc = jax.nn.silu(
+        sum(hB[:, i] * p["conv_B"][i][None, :] for i in range(w)) + bias[None, di : di + N]
+    )
+    Cc = jax.nn.silu(
+        sum(hC[:, i] * p["conv_C"][i][None, :] for i in range(w)) + bias[None, di + N :]
+    )
+
+    xs = xc.reshape(B, nh, P).astype(jnp.float32)
+    Bm = Bc.astype(jnp.float32)
+    Cm = Cc.astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)[:, 0] + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # [B,nh]
+
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, Bm
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state) + xs * p["Dskip"][None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
+    y = qlinear(y.astype(x.dtype), p["out_proj"], cfg.quant)
+    return y, {"conv": hist[:, 1:, :], "state": state}

@@ -1,0 +1,303 @@
+"""Mixture-of-experts FFN with sorted capacity dispatch.
+
+Token-choice top-k routing; dispatch via argsort-by-expert + static-capacity
+scatter (no [T, E, C] one-hot tensor — the buffers are [E, C, D], which
+shards cleanly: E over the ``model`` mesh axis for expert parallelism, or
+the expert FFN dim over ``model`` when E doesn't divide the axis).
+
+Router runs in f32 (correct top-k under bf16 params).  Aux losses: Switch
+load-balance and router z-loss, returned for the trainer to weigh in.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _act, qlinear
+
+
+def moe_init(rng, cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    dt = cfg.pdtype
+    ks = jax.random.split(rng, 5)
+    scale = 0.02
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * scale),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32) * scale).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        k2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(k2[0], (D, Fs), jnp.float32) * scale).astype(dt),
+            "w_up": (jax.random.normal(k2[1], (D, Fs), jnp.float32) * scale).astype(dt),
+            "w_down": (jax.random.normal(k2[2], (Fs, D), jnp.float32) * scale).astype(dt),
+        }
+    return p
+
+
+def _expert_mm(buf, w, qcfg):
+    """[E, C, Din] @ [E, Din, Dout] -> [E, C, Dout], optionally FP8-LNS."""
+    if isinstance(w, dict) and "codes" in w:
+        from .quantize import resolve_weight
+
+        w = resolve_weight(w, qcfg.weight_fmt if qcfg else "e4m3", buf.dtype)
+    if qcfg is not None and qcfg.enabled:
+        from .layers import _ste_qmatmul
+
+        return jax.vmap(
+            lambda a, b: _ste_qmatmul(a, b, qcfg.act_fmt, qcfg.weight_fmt, qcfg.matmul_impl)
+        )(buf, w).astype(buf.dtype)
+    return jnp.einsum("ecd,edf->ecf", buf, w)
+
+
+def capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = int(T * k / E * factor)
+    return max(8, -(-c // 8) * 8)  # multiple of 8, at least 8
+
+
+def moe_ffn(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, S, D] -> (out [B, S, D], aux losses).
+
+    Dispatch strategies (cfg.moe_dispatch):
+      * ``grouped`` (default): route per batch-row (further split per
+        seq-shard under SP) so the argsort/gather/scatter never crosses a
+        sharding boundary — per-layer dispatch collectives drop from
+        activation-gather scale (~100 GiB/dev/step on granite) to a single
+        act-sized reduce.  Capacity is per-group (slightly tighter drops).
+      * ``sorted_global``: one argsort over all B*S tokens (the simple
+        textbook formulation; kept as the baseline for EXPERIMENTS.md §Perf
+        hillclimb B and for ablation).
+    """
+    if cfg.moe_dispatch == "grouped":
+        from ..parallel.hints import _ctx  # active mesh context, if any
+
+        state = _ctx.get()
+        if state is not None:
+            return _moe_ffn_shard_map(p, x, cfg, *state)
+        return _moe_ffn_grouped(p, x, cfg)
+    return _moe_ffn_global(p, x, cfg)
+
+
+def _moe_ffn_shard_map(p, x, cfg, mesh, hint_specs) -> Tuple[jnp.ndarray, dict]:
+    """Shard-local dispatch via shard_map (no SPMD guesswork).
+
+    Tokens stay exactly where the activation sharding puts them; each device
+    routes and dispatches ITS tokens locally.  Experts:
+      * EP (n_experts % model == 0, e.g. deepseek 64, jamba 16): each model
+        rank holds E/tp experts (weights enter the region sharded on dim 0),
+        processes the slots routed to its experts, and the partial outputs
+        are combined with ONE act-sized psum over `model`.
+      * non-EP (granite 40): expert weights enter replicated (the FSDP
+        all-gather XLA inserts at the region boundary is the same gather the
+        dense path pays) and each device computes its tokens against all
+        experts — zero collectives inside the layer.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tp = mesh.shape.get("model", 1)
+    ep = cfg.n_experts % tp == 0 and tp > 1 and hint_specs.get("sp") is None
+    act_spec = hint_specs.get("act") or P()
+    E = cfg.n_experts
+
+    def w_spec(w):
+        """Static-quantized weights are {codes, scale} dicts: shard the
+        codes like the weight, replicate the tiny scale."""
+        espec = P("model") if ep else P()
+        if isinstance(w, dict) and "codes" in w:
+            return {"codes": espec, "scale": P()}
+        return espec
+
+    wspec = {
+        "router": P(),
+        "w_gate": w_spec(p["w_gate"]),
+        "w_up": w_spec(p["w_up"]),
+        "w_down": w_spec(p["w_down"]),
+    }
+
+    def region(p_loc, x_loc):
+        B_l, S_l, D = x_loc.shape
+        xf = x_loc.reshape(-1, D)
+        Tg = xf.shape[0]
+        k = cfg.top_k
+        logits = xf.astype(jnp.float32) @ p_loc["router"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        me = probs.mean(0)
+        counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+        ce = counts / (Tg * k)
+        aux = {
+            "moe_lb": E * jnp.sum(me * ce),
+            "moe_z": jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+        }
+        for ax in mesh.axis_names:
+            aux = {kk: jax.lax.pmean(vv, ax) for kk, vv in aux.items()}
+
+        flat_ids = ids.reshape(-1)
+        order = jnp.argsort(flat_ids, stable=True)
+        tok = order // k
+        eid = flat_ids[order]
+        starts = jnp.searchsorted(eid, jnp.arange(E))
+        rank = jnp.arange(Tg * k) - starts[eid]
+
+        if ep:
+            e_loc = E // tp
+            off = jax.lax.axis_index("model") * e_loc
+            local_eid = jnp.clip(eid - off, 0, e_loc - 1)
+            mine = (eid >= off) & (eid < off + e_loc)
+        else:
+            e_loc = E
+            local_eid = eid
+            mine = jnp.ones_like(eid, bool)
+
+        C = capacity(Tg, k, E, cfg.capacity_factor)
+        keep = (rank < C) & mine
+        rank_c = jnp.where(rank < C, rank, C - 1)
+
+        buf = jnp.zeros((e_loc, C, D), x_loc.dtype).at[local_eid, rank_c].add(
+            xf[tok] * keep[:, None].astype(x_loc.dtype)
+        )
+        h = _act(_expert_mm(buf, p_loc["w_gate"], cfg.quant), cfg.act_fn)
+        h = h * _expert_mm(buf, p_loc["w_up"], cfg.quant)
+        y = _expert_mm(h, p_loc["w_down"], cfg.quant)
+
+        g_sorted = gate_vals.reshape(-1)[order] * keep
+        out = jnp.zeros((Tg, D), jnp.float32).at[tok].add(
+            y[local_eid, rank_c].astype(jnp.float32) * g_sorted[:, None]
+        )
+        if ep:
+            out = jax.lax.psum(out, "model")
+        return out.reshape(B_l, S_l, D).astype(x_loc.dtype), aux
+
+    p_in = {k_: p[k_] for k_ in wspec}
+    out, aux = shard_map(
+        region,
+        mesh=mesh,
+        in_specs=(wspec, act_spec),
+        out_specs=(act_spec, P()),
+        check_rep=False,
+    )(p_in, x)
+
+    if "shared" in p:
+        from .layers import gated_mlp
+
+        out = out + gated_mlp(x, p["shared"], cfg.quant, cfg.act_fn)
+    return out, aux
+
+
+def _moe_ffn_grouped(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+    from ..parallel.hints import hint_meta
+
+    B, S, D = x.shape
+    sp = hint_meta("sp") or 1
+    g2 = sp if (sp > 1 and S % sp == 0) else 1
+    xg = x.reshape(B * g2, S // g2, D)
+
+    def one_group(xr):  # [Tg, D]
+        return _dispatch_group(p, xr, cfg)
+
+    out, aux = jax.vmap(one_group)(xg)
+    out = out.reshape(B, S, D)
+    aux = {k_: jnp.mean(v) for k_, v in aux.items()}
+
+    if "shared" in p:
+        from .layers import gated_mlp
+
+        out = out + gated_mlp(x, p["shared"], cfg.quant, cfg.act_fn)
+    return out, aux
+
+
+def _dispatch_group(p, xf, cfg) -> Tuple[jnp.ndarray, dict]:
+    """Sorted-capacity dispatch over one token group [Tg, D] (local)."""
+    Tg, D = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(0)
+    counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    ce = counts / (Tg * k)
+    aux = {"moe_lb": E * jnp.sum(me * ce),
+           "moe_z": jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)}
+
+    C = capacity(Tg, k, E, cfg.capacity_factor)
+    flat_ids = ids.reshape(-1)
+    order = jnp.argsort(flat_ids, stable=True)
+    tok = order // k
+    eid = flat_ids[order]
+    starts = jnp.searchsorted(eid, jnp.arange(E))
+    rank = jnp.arange(Tg * k) - starts[eid]
+    keep = rank < C
+    rank_c = jnp.where(keep, rank, C - 1)
+
+    buf = jnp.zeros((E, C, D), xf.dtype).at[eid, rank_c].add(
+        xf[tok] * keep[:, None].astype(xf.dtype)
+    )
+    h = _act(_expert_mm(buf, p["w_gate"], cfg.quant), cfg.act_fn)
+    h = h * _expert_mm(buf, p["w_up"], cfg.quant)
+    y = _expert_mm(h, p["w_down"], cfg.quant)
+
+    g_sorted = gate_vals.reshape(-1)[order] * keep
+    out = jnp.zeros((Tg, D), jnp.float32).at[tok].add(
+        y[eid, rank_c].astype(jnp.float32) * g_sorted[:, None]
+    )
+    return out.astype(xf.dtype), aux
+
+
+def _moe_ffn_global(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = xf.astype(jnp.float32) @ p["router"]  # [T, E] f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch LB + z-loss) ------------------------------- #
+    me = probs.mean(0)  # mean router prob per expert
+    one_hot_counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    ce = one_hot_counts / (T * k)  # fraction of routed slots per expert
+    aux_lb = E * jnp.sum(me * ce)
+    aux_z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sorted capacity dispatch -------------------------------------- #
+    C = capacity(T, k, E, cfg.capacity_factor)
+    flat_ids = ids.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_ids, stable=True)
+    tok = order // k
+    eid = flat_ids[order]
+    starts = jnp.searchsorted(eid, jnp.arange(E))
+    rank = jnp.arange(T * k) - starts[eid]
+    keep = rank < C
+    rank_c = jnp.where(keep, rank, C - 1)
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    vals = xf[tok] * keep[:, None].astype(x.dtype)
+    buf = buf.at[eid, rank_c].add(vals)
+
+    h = _act(_expert_mm(buf, p["w_gate"], cfg.quant), cfg.act_fn)
+    h = h * _expert_mm(buf, p["w_up"], cfg.quant)
+    y = _expert_mm(h, p["w_down"], cfg.quant)  # [E, C, D]
+
+    g_sorted = gate_vals.reshape(-1)[order] * keep
+    out = jnp.zeros((T, D), jnp.float32)
+    out = out.at[tok].add(y[eid, rank_c].astype(jnp.float32) * g_sorted[:, None])
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        from .layers import gated_mlp
+
+        out = out + gated_mlp(x, p["shared"], cfg.quant, cfg.act_fn).reshape(T, D)
+
+    return out.reshape(B, S, D), {"moe_lb": aux_lb, "moe_z": aux_z}

@@ -1,0 +1,53 @@
+"""Static (post-training) FP8 weight quantization.
+
+Converts eligible matmul weights in a params pytree to
+``{"codes": uint8, "scale": f32}`` — weights then cross HBM at 1 byte/param
+and are decoded to compute dtype by the bit-placement dequant
+(kernels.common.code_to_f32, a handful of integer VPU ops: the paper's
+cheap-integer-arithmetic thesis applied at the system level).
+
+This is the deployment mode for memory-bound serving: decode steps read
+every active weight once per token, so weight bytes ~halve the dominant
+roofline term (EXPERIMENTS.md §Perf hillclimb C).
+
+Stacked block weights get a per-block scale (axis 0); everything else is
+per-tensor.  Embedding tables stay float (gather path), norms/biases stay
+float (tiny).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import quantize
+
+QUANT_WEIGHT_NAMES = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_uk", "w_uv",
+    "w_dkv", "out_proj", "w_z", "w_x", "w_B", "w_C", "w_dt", "img_proj",
+    "unembed",
+}
+
+
+def quantize_params(params, fmt: str = "e4m3"):
+    """Replace eligible weight leaves with {"codes", "scale"} dicts."""
+
+    def walk(path, leaf):
+        keys = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
+        name = keys[-1]
+        if name in QUANT_WEIGHT_NAMES and leaf.ndim >= 2:
+            stacked = keys[0] in ("blocks", "enc_blocks")
+            q = quantize(leaf, fmt, axis=0 if stacked else None)
+            scale = q.scale
+            return {"codes": q.codes, "scale": jnp.asarray(scale, jnp.float32)}
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def resolve_weight(w, fmt: str = "e4m3", dtype=jnp.bfloat16):
+    """Dequantize a static-quantized weight dict (no-op for plain arrays)."""
+    if isinstance(w, dict) and "codes" in w:
+        from ..kernels.common import code_to_f32
+
+        return (code_to_f32(w["codes"], fmt) * w["scale"]).astype(dtype)
+    return w

@@ -1,0 +1,255 @@
+"""Transformer stack assembly: scan-over-blocks, all families.
+
+Layers repeat in a static *pattern* of length P (1 for uniform stacks, 2 for
+gemma2 local/global, 6 for gemma3, 8 for jamba); parameters are stacked
+[n_blocks, ...] and the stack is a single ``lax.scan`` over blocks — compile
+time is O(P), not O(n_layers).  ``first_dense`` prefix layers (deepseek)
+live outside the scan.
+
+Modes:
+  * train/prefill: full-sequence forward; prefill also emits the KV cache.
+  * decode: one token against a full-length cache (``pos`` = write index).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.hints import hint
+from .attention import gqa_decode, gqa_forward, gqa_init, mla_decode, mla_forward, mla_init
+from .layers import gated_mlp, qlinear, rms_norm
+from .mamba2 import mamba2_init, ssd_decode, ssd_forward
+from .moe import moe_ffn, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SubSpec:
+    mixer: str  # "attn" | "mamba"
+    attn_global: bool = True
+    ffn: str = "mlp"  # "mlp" | "moe" | "none"
+    cross: bool = False  # enc-dec cross attention after self attention
+    causal: bool = True
+
+
+def layer_specs(cfg) -> Tuple[List[SubSpec], List[SubSpec], int]:
+    """(prefix_specs, pattern_specs, n_blocks)."""
+    P = cfg.layer_pattern_period
+    n_prefix = cfg.first_dense
+    body = cfg.n_layers - n_prefix
+    assert body % P == 0, (cfg.name, body, P)
+
+    def spec(i: int) -> SubSpec:
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        ffn = "none" if cfg.d_ff == 0 and not cfg.is_moe_layer(i) else (
+            "moe" if cfg.is_moe_layer(i) else "mlp"
+        )
+        return SubSpec(
+            mixer=mixer,
+            attn_global=cfg.is_global_attn_layer(i),
+            ffn=ffn,
+            cross=(cfg.family == "encdec"),
+            causal=True,
+        )
+
+    prefix = [dataclasses.replace(spec(i), ffn="mlp") for i in range(n_prefix)]
+    pattern = [spec(n_prefix + j) for j in range(P)]
+    return prefix, pattern, body // P
+
+
+# --------------------------------------------------------------------------- #
+# Per-sublayer init / forward / decode
+# --------------------------------------------------------------------------- #
+def _mlp_init(rng, cfg, d_ff):
+    D = cfg.d_model
+    dt = cfg.pdtype
+    ks = jax.random.split(rng, 3)
+    s = 0.02
+    return {
+        "w_gate": (jax.random.normal(ks[0], (D, d_ff), jnp.float32) * s).astype(dt),
+        "w_up": (jax.random.normal(ks[1], (D, d_ff), jnp.float32) * s).astype(dt),
+        "w_down": (jax.random.normal(ks[2], (d_ff, D), jnp.float32) * s).astype(dt),
+    }
+
+
+def sublayer_init(rng, cfg, spec: SubSpec):
+    D = cfg.d_model
+    dt = cfg.pdtype
+    ks = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((D,), dt)}
+    if spec.mixer == "attn":
+        p["attn"] = mla_init(ks[0], cfg) if cfg.attn_impl == "mla" else gqa_init(ks[0], cfg)
+    else:
+        p["mamba"] = mamba2_init(ks[0], cfg)
+    if spec.cross:
+        p["ln_x"] = jnp.zeros((D,), dt)
+        p["cross"] = gqa_init(ks[1], cfg)
+    if spec.ffn != "none":
+        p["ln2"] = jnp.zeros((D,), dt)
+        p["ffn"] = moe_init(ks[2], cfg) if spec.ffn == "moe" else _mlp_init(ks[2], cfg, cfg.d_ff)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = jnp.zeros((D,), dt)
+        if spec.ffn != "none":
+            p["ln2_post"] = jnp.zeros((D,), dt)
+    return p
+
+
+def _use_rope(cfg) -> bool:
+    return cfg.family != "encdec"
+
+
+def sublayer_forward(p, spec: SubSpec, x, cfg, *, positions, mode,
+                     enc_out=None, aux=None):
+    """Full-sequence sublayer.  Returns (x, cache_entry, aux)."""
+    cache: Dict[str, Any] = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.attn_impl == "mla":
+            out, c = mla_forward(p["attn"], h, cfg, positions=positions)
+        else:
+            out, c = gqa_forward(
+                p["attn"], h, cfg, is_global=spec.attn_global,
+                positions=positions, causal=spec.causal, use_rope=_use_rope(cfg),
+            )
+        cache["self"] = c
+    else:
+        out, c = ssd_forward(p["mamba"], h, cfg)
+        cache["self"] = c
+    if cfg.sandwich_norm:
+        out = rms_norm(out, p["ln1_post"], cfg.norm_eps)
+    x = x + out
+
+    if spec.cross:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        # cross K/V from encoder output (cached for decode)
+        from .attention import _gqa_qkv
+
+        _, xk, xv = _gqa_qkv(
+            p["cross"], enc_out, cfg,
+            jnp.zeros(enc_out.shape[:2], jnp.int32), use_rope=False,
+        )
+        out, _ = gqa_forward(
+            p["cross"], h, cfg, is_global=True, positions=positions,
+            cross_kv=(xk, xv), use_rope=False,
+        )
+        cache["xk"], cache["xv"] = xk, xv
+        x = x + out
+
+    if spec.ffn != "none":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            out, moe_aux = moe_ffn(p["ffn"], h, cfg)
+            if aux is not None:
+                aux = {k: aux[k] + moe_aux[k] for k in aux}
+        else:
+            out = gated_mlp(h, p["ffn"], cfg.quant, cfg.act_fn)
+        if cfg.sandwich_norm:
+            out = rms_norm(out, p["ln2_post"], cfg.norm_eps)
+        x = x + out
+    return x, cache, aux
+
+
+def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None):
+    """Single-token sublayer.  Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        if cfg.attn_impl == "mla":
+            out, c = mla_decode(p["attn"], h, cfg, cache=cache["self"], pos=pos)
+        else:
+            out, c = gqa_decode(
+                p["attn"], h, cfg, is_global=spec.attn_global,
+                cache=cache["self"], pos=pos, use_rope=_use_rope(cfg),
+            )
+        new_cache["self"] = c
+    else:
+        out, c = ssd_decode(p["mamba"], h, cfg, cache["self"])
+        new_cache["self"] = c
+    if cfg.sandwich_norm:
+        out = rms_norm(out, p["ln1_post"], cfg.norm_eps)
+    x = x + out
+
+    if spec.cross:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        out, _ = gqa_decode(
+            p["cross"], h, cfg, is_global=True, cache=None, pos=pos,
+            cross_kv=(cache["xk"], cache["xv"]), use_rope=False,
+        )
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        x = x + out
+
+    if spec.ffn != "none":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            out, moe_aux = moe_ffn(p["ffn"], h, cfg)
+            if aux is not None:
+                aux = {k: aux[k] + moe_aux[k] for k in aux}
+        else:
+            out = gated_mlp(h, p["ffn"], cfg.quant, cfg.act_fn)
+        if cfg.sandwich_norm:
+            out = rms_norm(out, p["ln2_post"], cfg.norm_eps)
+        x = x + out
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------- #
+# Stack: scan over blocks of P sublayers
+# --------------------------------------------------------------------------- #
+AUX0 = {"moe_lb": 0.0, "moe_z": 0.0}
+
+
+def stack_init(rng, cfg, pattern: List[SubSpec], n_blocks: int):
+    """Stacked block params: vmap the per-block init over n_blocks rngs."""
+
+    def block_init(r):
+        ks = jax.random.split(r, len(pattern))
+        return tuple(sublayer_init(k, cfg, s) for k, s in zip(ks, pattern))
+
+    return jax.vmap(block_init)(jax.random.split(rng, n_blocks))
+
+
+def stack_forward(blocks, x, cfg, pattern, *, positions, mode,
+                  enc_out=None, remat=True):
+    """Returns (x, stacked_caches_or_None, aux)."""
+    want_cache = mode == "prefill"
+
+    def block_fn(carry, bp):
+        x, aux = carry
+        x = hint(x, "act")
+        caches = []
+        for j, spec in enumerate(pattern):
+            x, c, aux = sublayer_forward(
+                bp[j], spec, x, cfg, positions=positions, mode=mode,
+                enc_out=enc_out, aux=aux,
+            )
+            caches.append(c)
+        return (x, aux), tuple(caches) if want_cache else None
+
+    fn = block_fn
+    if remat and mode == "train":
+        policy = (
+            jax.checkpoint_policies.dots_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        fn = jax.checkpoint(block_fn, policy=policy)
+    (x, aux), caches = jax.lax.scan(fn, (x, dict(AUX0)), blocks)
+    return x, caches, aux
+
+
+def stack_decode(blocks, caches, x, cfg, pattern, *, pos):
+    def block_fn(carry, scanned):
+        x, aux = carry
+        x = hint(x, "act")
+        bp, bc = scanned
+        new_cs = []
+        for j, spec in enumerate(pattern):
+            x, c, aux = sublayer_decode(bp[j], spec, x, cfg, cache=bc[j], pos=pos, aux=aux)
+            new_cs.append(c)
+        return (x, aux), tuple(new_cs)
+
+    (x, aux), new_caches = jax.lax.scan(block_fn, (x, dict(AUX0)), (blocks, caches))
+    return x, new_caches, aux

@@ -1,0 +1,4 @@
+"""Optimizers and distributed-optimization tricks."""
+from . import adamw
+
+__all__ = ["adamw"]

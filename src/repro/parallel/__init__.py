@@ -1,0 +1,4 @@
+"""Parallelism: mesh axes, sharding rules, collective helpers."""
+from . import sharding
+
+__all__ = ["sharding"]

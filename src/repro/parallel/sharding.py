@@ -1,0 +1,226 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for any mesh.
+
+Scheme (MaxText/Megatron-style FSDP x TP, plus EP for MoE):
+  * ``fsdp`` axes = ("pod", "data") when present: weights sharded for
+    storage along their input dim; XLA all-gathers per layer inside the
+    scan (FSDP) and reduce-scatters gradients.
+  * ``model`` axis: tensor parallelism on head/ff/vocab dims when the dim
+    is divisible by the axis size, replication otherwise (e.g. qwen2's 14
+    heads, granite's 40 experts).  Divisibility is checked per tensor, so
+    every assigned arch lowers on the same mesh.
+  * MoE experts: expert-parallel over ``model`` when n_experts divides the
+    axis; otherwise TP inside the expert FFN dim.
+  * Decode caches: batch over fsdp axes when divisible; the KV sequence dim
+    over ``model`` (flash-decoding style — the two-pass softmax in
+    ``decode_attention`` makes this a pair of small collectives), falling
+    back to sequence-over-everything for global_batch == 1 (long_500k).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in fsdp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def seq_parallel(cfg, mesh: Mesh) -> bool:
+    """Policy B: archs whose attention heads don't divide the model axis
+    (qwen2 14H, qwen3 40H, granite 24H, whisper 8H) run sequence-parallel
+    over ``model`` with 2D-FSDP (ZeRO-3-style) weight storage instead of
+    tensor parallelism."""
+    tp = tp_size(mesh)
+    if tp <= 1 or cfg.attn_impl == "none":
+        return False
+    return cfg.n_heads % tp != 0
+
+
+def param_pspecs(cfg, params_tree, mesh: Mesh):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or ShapeDtype)."""
+    tp = tp_size(mesh)
+    fs = fsdp_axes(mesh)
+    fsdp = fs if fs else None
+    D = cfg.d_model
+    sp = seq_parallel(cfg, mesh)
+
+    head_tp = _div(cfg.n_heads, tp) and not sp
+    kv_tp = _div(cfg.n_kv_heads, tp) and not sp
+    ff_tp = _div(cfg.d_ff, tp) and not sp
+    moe_ff_tp = _div(cfg.moe_d_ff, tp) and not sp
+    ep = _div(cfg.n_experts, tp) and not sp
+    vocab_tp = _div(cfg.vocab_padded, tp) and not sp
+    from ..models.mamba2 import dims as mdims
+
+    if cfg.ssm_state:
+        di, nh, _, N = mdims(cfg)
+        di_tp = _div(di, tp) and _div(nh, tp) and not sp
+    else:
+        di_tp = False
+
+    # Storage-sharding candidates: under seq-parallel the model axis carries
+    # no TP, so it joins the FSDP axes (ZeRO-3 over the full mesh).
+    cands = ([fs + ("model",)] if sp and fs else []) + ([fs] if fs else [])
+
+    def fsdp_if(dim: int):
+        """Shard a dim over the largest divisible storage-axis set."""
+        for axes in cands:
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if _div(dim, max(total, 1)):
+                return axes
+        return None
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(e, "key", getattr(e, "idx", None)) for e in path]
+        name = keys[-1]
+        if name == "codes":  # static-quantized weight: shard like the weight
+            name = keys[-2]
+        elif name == "scale":
+            return P(*([None] * leaf.ndim))
+        stacked = keys[0] in ("blocks", "enc_blocks")  # leading n_blocks dim
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        lead = (None,) if stacked else ()
+
+        def mk(*spec):
+            return P(*(lead + spec))
+
+        if name == "embed":
+            if sp:
+                return P(fsdp_if(cfg.vocab_padded), None)
+            return P("model" if vocab_tp else None, fsdp_if(D))
+        if name == "unembed":
+            if sp:
+                return P(fsdp_if(D), None)
+            return P(fsdp_if(D), "model" if vocab_tp else None)
+        if name in ("enc_pos", "dec_pos"):
+            return P(None, None)
+        if name == "img_proj":
+            return P(fsdp_if(D), "model" if _div(D, tp) and not sp else None)
+        # 1-D scales / biases / tiny vectors: replicate
+        if len(shape) <= 1:
+            return mk(*([None] * len(shape)))
+        if name == "wq":
+            return mk(fsdp_if(D), "model" if head_tp else None)
+        if name in ("wk", "wv"):
+            return mk(fsdp_if(D), "model" if kv_tp else None)
+        if name == "wo":
+            return mk("model" if head_tp else None, fsdp_if(D))
+        if name == "w_dkv":
+            return mk(fsdp_if(D), None)
+        if name in ("w_uk", "w_uv"):
+            return mk(None, "model" if head_tp else None)
+        if name == "router":
+            return mk(fsdp_if(D), None)
+        if name in ("w_gate", "w_up"):
+            if len(shape) == 3:  # [E, D, F] routed experts
+                if ep:
+                    return mk("model", fsdp_if(D), None)
+                return mk(None, fsdp_if(D), "model" if moe_ff_tp else None)
+            f = shape[-1]
+            return mk(fsdp_if(D), "model" if _div(f, tp) and not sp else None)
+        if name == "w_down":
+            if len(shape) == 3:  # [E, F, D]
+                if ep:
+                    return mk("model", None, fsdp_if(D))
+                return mk(None, "model" if moe_ff_tp else None, fsdp_if(D))
+            f = shape[0]
+            return mk("model" if _div(f, tp) and not sp else None, fsdp_if(D))
+        if name in ("w_z", "w_x"):
+            return mk(fsdp_if(D), "model" if di_tp else None)
+        if name in ("w_B", "w_C", "w_dt"):
+            return mk(fsdp_if(D), None)
+        if name == "conv_x":
+            return mk(None, "model" if di_tp else None)
+        if name in ("conv_B", "conv_C"):
+            return mk(None, None)
+        if name == "out_proj":
+            return mk("model" if di_tp else None, fsdp_if(D))
+        # fallback: replicate
+        return mk(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def batch_pspecs(cfg, mesh: Mesh):
+    """Batches shard over the fsdp axes; sequence over ``model`` under SP."""
+    fs = fsdp_axes(mesh)
+    dp = fs if fs else None
+    seq = "model" if seq_parallel(cfg, mesh) else None
+    specs = {"tokens": P(dp, seq), "labels": P(dp, seq)}
+    if cfg.family == "encdec":
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        specs["img"] = P(dp, None, None)
+    return specs
+
+
+def cache_pspecs(cfg, cache_tree, mesh: Mesh, global_batch: int):
+    """Decode cache sharding (see module docstring)."""
+    tp = tp_size(mesh)
+    fs = fsdp_axes(mesh)
+    dpn = dp_size(mesh)
+    batch_dp = fs if (fs and _div(global_batch, dpn)) else None
+    kv_tp = _div(cfg.n_kv_heads, tp)
+    from ..models.mamba2 import dims as mdims
+
+    if cfg.ssm_state:
+        _, nh, _, _ = mdims(cfg)
+        nh_tp = _div(nh, tp)
+    else:
+        nh_tp = False
+    seq_axes = ("data", "model") if batch_dp is None and fs else "model"
+
+    def rule(path, leaf):
+        keys = [getattr(e, "key", getattr(e, "idx", None)) for e in path]
+        name = keys[-1]
+        # blocks caches are stacked [NB, B, ...]; prefix caches are [B, ...]
+        lead = (None,) if keys[0] == "blocks" else ()
+
+        def mk(*spec):
+            return P(*(lead + spec))
+
+        if name in ("k", "v"):  # [B, S, KV, hd]
+            if batch_dp is not None:
+                return mk(batch_dp, "model" if not kv_tp else None,
+                          "model" if kv_tp else None, None)
+            return mk(None, seq_axes, None, None)
+        if name in ("ckv", "kpe"):  # [B, S, L]
+            if batch_dp is not None:
+                return mk(batch_dp, "model", None)
+            return mk(None, seq_axes, None)
+        if name in ("xk", "xv"):  # [B, enc, KV, hd] (enc=1500: no seq TP)
+            return mk(batch_dp, None, "model" if kv_tp else None, None)
+        if name == "conv":  # [B, w-1, ch]
+            return mk(batch_dp, None, None)
+        if name == "state":  # [B, nh, P, N]
+            return mk(batch_dp, "model" if nh_tp else None, None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

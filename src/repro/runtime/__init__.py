@@ -1,0 +1,4 @@
+"""Runtime: step builders, fault tolerance, training loop."""
+from . import steps
+
+__all__ = ["steps"]

@@ -1,0 +1,132 @@
+"""Fault tolerance: watchdog, heartbeat, checkpoint-restart training loop.
+
+Cluster model (1000+ nodes): an external orchestrator restarts failed jobs;
+inside the job we provide
+  * a step-deadline watchdog (straggler mitigation: a step exceeding
+    ``deadline_s`` marks the worker unhealthy so the orchestrator can evict
+    the slow host and restart on the survivors — elastic restore handles
+    the new mesh),
+  * a heartbeat file (step + wallclock) the orchestrator monitors,
+  * ``run_training``: the crash-safe loop — periodic async checkpoints,
+    automatic restore-and-continue after a failure (here exercised by
+    injected faults in tests; on a cluster, by process restart).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import store
+from ..data.pipeline import Dataset
+
+
+class StepWatchdog:
+    """Detects straggling steps: ``check()`` raises if the previous step ran
+    past its deadline (on real clusters this flags the host for eviction)."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self._t0: Optional[float] = None
+        self.tripped = False
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def check(self):
+        if self._t0 is not None and time.monotonic() - self._t0 > self.deadline_s:
+            self.tripped = True
+            raise TimeoutError(
+                f"step exceeded {self.deadline_s}s deadline (straggler)"
+            )
+        self._t0 = None
+
+
+def write_heartbeat(path: pathlib.Path, step: int, extra: dict | None = None):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps({"step": step, "t": time.time(), **(extra or {})}))
+    tmp.rename(path)
+
+
+def run_training(
+    *,
+    train_step: Callable,
+    init_state: Callable,
+    dataset: Dataset,
+    max_steps: int,
+    ckpt_dir: str | pathlib.Path,
+    ckpt_every: int = 50,
+    state_shardings=None,
+    to_device: Callable = lambda b: b,
+    fault_hook: Optional[Callable[[int], None]] = None,
+    step_deadline_s: float = 3600.0,
+    log: Callable = print,
+    max_restarts: int = 3,
+):
+    """Crash-safe training loop. Returns (state, metrics_history)."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    heartbeat = ckpt_dir / "heartbeat.json"
+    watchdog = StepWatchdog(step_deadline_s)
+    history = []
+    restarts = 0
+
+    def _fresh():
+        return init_state(), 0
+
+    if store.latest_step(ckpt_dir) is not None:
+        like = jax.eval_shape(init_state)
+        state, step, dstate = store.restore(
+            ckpt_dir, like, shardings=state_shardings
+        )
+        step = Dataset.resume_step(dstate) if dstate else step
+        log(f"[fault] resumed from checkpoint at step {step}")
+    else:
+        state, step = _fresh()
+
+    pending = None
+    while step < max_steps:
+        try:
+            if fault_hook is not None:
+                fault_hook(step)  # test hook: may raise to simulate a crash
+            watchdog.start()
+            batch = to_device(dataset.batch(step))
+            state, metrics = train_step(state, batch)
+            watchdog.check()
+            step += 1
+            if step % ckpt_every == 0 or step == max_steps:
+                metrics = {
+                    k: float(np.asarray(v)) for k, v in metrics.items()
+                }
+                history.append({"step": step, **metrics})
+                log(f"[train] step {step}: {metrics}")
+                if pending is not None:
+                    pending.result()  # don't stack async writes
+                pending = store.save(
+                    ckpt_dir, state, step=step,
+                    data_state=dataset.state(step),
+                )
+                write_heartbeat(heartbeat, step)
+        except (TimeoutError, RuntimeError, ValueError) as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log(f"[fault] step {step} failed ({e}); restoring last checkpoint")
+            if pending is not None:
+                pending.result()
+            last = store.latest_step(ckpt_dir)
+            if last is None:
+                state, step = _fresh()
+            else:
+                like = jax.eval_shape(init_state)
+                state, step, dstate = store.restore(
+                    ckpt_dir, like, shardings=state_shardings
+                )
+                step = Dataset.resume_step(dstate) if dstate else step
+    if pending is not None:
+        pending.result()
+    return state, history

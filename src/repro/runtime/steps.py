@@ -1,0 +1,57 @@
+"""Step builders: train_step / prefill_step / decode_step as pure functions.
+
+``train_step`` holds f32 master weights in the state and casts to the model
+compute dtype inside the loss so gradients come back f32 (standard mixed
+precision).  All builders are mesh-agnostic: shardings are applied by the
+caller (launch/dryrun.py, launch/train.py) via in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+from ..optim import adamw
+
+
+def make_train_state(model: Model, rng) -> Dict[str, Any]:
+    params = model.init(rng)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {"params": master, "opt": adamw.init(master)}
+
+
+def build_train_step(model: Model, opt_cfg: adamw.OptConfig) -> Callable:
+    cfg = model.cfg
+
+    def train_step(state, batch):
+        def loss_of_master(master):
+            compute = jax.tree.map(lambda p: p.astype(cfg.pdtype), master)
+            return model.loss_fn(compute, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of_master, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, stats = adamw.update(
+            grads, state["opt"], state["params"], opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, **stats)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests on reduced same-family configs.
+
+For each of the 10 assigned archs: one forward/loss eval, one grad step,
+one prefill + decode step — asserting output shapes and finiteness (no
+NaNs).  Full-size configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, get_config
+from repro.models import Model, count_params
+
+S = 32
+B = 2
+
+
+def make_batch(cfg):
+    b = {
+        "tokens": jnp.zeros((B, S), jnp.int32) + 3,
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["frames"] = jnp.full((B, cfg.enc_context, cfg.d_model), 0.01, jnp.float32)
+    if cfg.family == "vlm":
+        b["img"] = jnp.full((B, cfg.n_img_tokens, cfg.d_model), 0.01, jnp.float32)
+    return b
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in CONFIGS:
+        cfg = get_config(name, smoke=True)
+        m = Model(cfg, max_seq=S)
+        params = m.init(jax.random.PRNGKey(0))
+        out[name] = (cfg, m, params)
+    return out
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_loss_finite(built, name):
+    cfg, m, params = built[name]
+    loss, metrics = jax.jit(m.loss_fn)(params, make_batch(cfg))
+    assert np.isfinite(float(loss))
+    # random init over vocab v: loss ~ ln(v)
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab)) < 1.5
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_grad_nonzero_finite(built, name):
+    cfg, m, params = built[name]
+    g = jax.jit(jax.grad(lambda p, b: m.loss_fn(p, b)[0]))(params, make_batch(cfg))
+    leaves = jax.tree_util.tree_leaves(g)
+    total = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32)))) for x in leaves)
+    assert np.isfinite(total) and total > 0
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_prefill_decode_shapes(built, name):
+    cfg, m, params = built[name]
+    batch = make_batch(cfg)
+    logits, cache = jax.jit(m.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+    # decode continues at the next position
+    pos = jnp.int32(S - 1 if cfg.family != "vlm" else S + cfg.n_img_tokens - 1)
+    logits2, cache2 = jax.jit(m.decode_step)(params, cache, jnp.array([1, 2]), pos)
+    assert logits2.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_decode_matches_prefill(built, name):
+    """Prefill logits at last position == decoding the same token stream."""
+    if name == "whisper-base":
+        pytest.skip("learned-position offsets differ by design in stub decode")
+    cfg, m, params = built[name]
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, size=(B, 8)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["img"] = jnp.full((B, cfg.n_img_tokens, cfg.d_model), 0.01, jnp.float32)
+    logits_p, _ = jax.jit(m.prefill)(params, batch)
+
+    # token-by-token decode of the same stream
+    cache = m.make_cache(B, 8 + (cfg.n_img_tokens if cfg.family == "vlm" else 0))
+    if cfg.family == "vlm":
+        # prefill the image prefix via prefill of 1 token is messy; decode-only
+        # equivalence is checked for non-vlm families
+        pytest.skip("vlm image prefix requires prefill path")
+    step = jax.jit(m.decode_step)
+    for t in range(8):
+        logits_d, cache = step(params, cache, toks[:, t], jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(logits_d), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "qwen2-0.5b": (0.50, 0.1),
+        "gemma2-27b": (27.2, 1.0),
+        "qwen3-14b": (14.8, 1.0),
+        "gemma3-12b": (11.8, 1.0),
+        "jamba-v0.1-52b": (51.5, 2.0),
+        "deepseek-v2-lite-16b": (15.7, 1.0),
+        "granite-moe-3b-a800m": (3.3, 0.4),
+        "llava-next-mistral-7b": (7.3, 0.5),
+        "mamba2-780m": (0.78, 0.1),
+        "whisper-base": (0.09, 0.05),
+    }
+    for name, (want, tol) in expect.items():
+        got = count_params(get_config(name)) / 1e9
+        assert abs(got - want) <= tol, f"{name}: {got:.2f}B vs {want}B"
+
+
+def test_active_params():
+    assert count_params(get_config("jamba-v0.1-52b"), active_only=True) / 1e9 == pytest.approx(12.0, abs=1.0)
+    assert count_params(get_config("deepseek-v2-lite-16b"), active_only=True) / 1e9 == pytest.approx(2.7, abs=0.5)
+    assert count_params(get_config("granite-moe-3b-a800m"), active_only=True) / 1e9 == pytest.approx(0.89, abs=0.2)
+
+
+def test_quantized_path_smoke():
+    """The paper's FP8-LNS fabric drives a whole model forward/backward."""
+    cfg = get_config("qwen2-0.5b", smoke=True, quant="fp8_lns")
+    assert cfg.quant.enabled
+    m = Model(cfg, max_seq=S)
+    params = m.init(jax.random.PRNGKey(0))
+    loss, _ = jax.jit(m.loss_fn)(params, make_batch(cfg))
+    assert np.isfinite(float(loss))
+    g = jax.jit(jax.grad(lambda p, b: m.loss_fn(p, b)[0]))(params, make_batch(cfg))
+    total = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32)))) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(total) and total > 0

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/format/mode sweeps.
+
+All kernels run in interpret mode on CPU; correctness here is the TPU
+numerics (the kernel body is backend-independent integer math).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import E4M3, E5M2
+from repro.core.quant import quantize
+from repro.kernels import ref
+from repro.kernels.common import code_to_f32
+from repro.kernels.fp8_elementwise import fp8_elementwise
+from repro.kernels.lns_matmul import lns_matmul
+from repro.kernels import ops
+
+
+def _rand_codes(rng, shape, fmt):
+    """Random NORMAL codes (incl. signs) — the production domain."""
+    mags = rng.integers(fmt.min_normal_code, fmt.max_normal_code + 1, size=shape)
+    signs = rng.integers(0, 2, size=shape) << 7
+    return (mags | signs).astype(np.uint8)
+
+
+@pytest.mark.parametrize("fmt", [E5M2, E4M3], ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", [(8, 16, 8), (32, 64, 16), (128, 128, 128), (100, 70, 50)])
+@pytest.mark.parametrize("mode", ["rne", "rz", "faithful"])
+def test_lns_matmul_matches_ref(fmt, shape, mode):
+    M, K, N = shape
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(_rand_codes(rng, (M, K), fmt))
+    w = jnp.asarray(_rand_codes(rng, (K, N), fmt))
+    got = lns_matmul(x, w, fmt=fmt.name, mode=mode, interpret=True,
+                     blocks=(32, 32, 32))
+    want = ref.lns_matmul_ref(x, w, fmt.name, mode)
+    # Same product codes, different f32 summation order: bound the error by
+    # the f32 accumulation bound over sum(|products|) (signs stripped).
+    sum_abs = np.asarray(ref.lns_matmul_ref(x & 0x7F, w & 0x7F, fmt.name, mode))
+    tol = (K + 2) * np.finfo(np.float32).eps * sum_abs + 1e-6
+    err = np.abs(np.asarray(got) - np.asarray(want))
+    assert np.all(err <= tol), f"max excess {np.max(err - tol)}"
+
+
+@pytest.mark.parametrize("fmt", [E5M2, E4M3], ids=lambda f: f.name)
+def test_fused_dequant_matmul_matches_ref(fmt):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(_rand_codes(rng, (64, 96), fmt))
+    w = jnp.asarray(_rand_codes(rng, (96, 32), fmt))
+    got = lns_matmul(x, w, fmt=fmt.name, impl="fused_dequant", interpret=True,
+                     blocks=(32, 32, 32), compute_dtype=jnp.float32)
+    want = ref.dequant_matmul_ref(x, w, fmt.name)
+    # blocked vs single-pass f32 accumulation order: bound by sum(|x||w|)
+    sum_abs = np.asarray(ref.dequant_matmul_ref(x & 0x7F, w & 0x7F, fmt.name))
+    tol = (x.shape[1] + 2) * np.finfo(np.float32).eps * sum_abs + 1e-6
+    err = np.abs(np.asarray(got) - np.asarray(want))
+    assert np.all(err <= tol), f"max excess {np.max(err - tol)}"
+
+
+@pytest.mark.parametrize("fmt", [E5M2, E4M3], ids=lambda f: f.name)
+@pytest.mark.parametrize("op", ["mul", "div", "square", "recip", "sqrt", "rsqrt"])
+@pytest.mark.parametrize("shape", [(17,), (64, 64), (3, 5, 7)])
+def test_fp8_elementwise_matches_ref(fmt, op, shape):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(_rand_codes(rng, shape, fmt))
+    if op in ("sqrt", "rsqrt"):
+        x = x & 0x7F  # positive domain
+    y = None
+    if op in ("mul", "div"):
+        y = jnp.asarray(_rand_codes(rng, shape, fmt))
+    mode = "rne"
+    got = fp8_elementwise(op, x, y, fmt=fmt.name, mode=mode, interpret=True,
+                          block_rows=8)
+    want = ref.fp8_elementwise_ref(op, fmt.name, mode, x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_code_to_f32_matches_decode_lut():
+    for fmt in (E5M2, E4M3):
+        codes = jnp.arange(256, dtype=jnp.uint8)
+        got = np.asarray(code_to_f32(codes, fmt))
+        lut = fmt.code_to_float32_bits()
+        normal_or_zero = fmt.is_normal(np.arange(256)) | ((np.arange(256) & 0x7F) == 0)
+        np.testing.assert_array_equal(got[normal_or_zero], lut[normal_or_zero])
+        # non-normals map to 0 by contract
+        assert np.all(got[~normal_or_zero] == 0.0)
+
+
+def test_matmul_q_scales():
+    rng = np.random.default_rng(1)
+    xf = rng.standard_normal((16, 32)).astype(np.float32) * 3.0
+    wf = rng.standard_normal((32, 8)).astype(np.float32) * 0.1
+    qx = quantize(jnp.asarray(xf), "e4m3")
+    qw = quantize(jnp.asarray(wf), "e4m3")
+    for impl in ("xla", "lns", "fused_dequant"):
+        out = np.asarray(ops.matmul_q(qx, qw, impl=impl, interpret=True,
+                                      compute_dtype=jnp.float32))
+        ref_out = xf @ wf
+        rel = np.abs(out - ref_out) / (np.abs(ref_out) + 1e-3)
+        assert np.median(rel) < 0.08, f"{impl}: median rel err {np.median(rel)}"
+
+
+def test_elementwise_q_scale_algebra():
+    rng = np.random.default_rng(3)
+    xf = jnp.asarray(np.abs(rng.standard_normal((256,))).astype(np.float32) + 0.1)
+    q = quantize(xf, "e4m3")
+    r = ops.elementwise_q("rsqrt", q, interpret=True)
+    got = np.asarray(r.dequantize())
+    want = 1.0 / np.sqrt(np.asarray(xf))
+    rel = np.abs(got - want) / want
+    assert np.median(rel) < 0.07

@@ -1,0 +1,107 @@
+"""Pipeline-parallel correctness (subprocess, 4 devices) + data pipeline tests."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, Dataset
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def run_script(body: str, devices=4, timeout=600) -> str:
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=SRC,
+        JAX_PLATFORMS="cpu",
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_pipeline_matches_sequential():
+    out = run_script("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_test_mesh
+from repro.parallel.pipeline import pipeline_forward, bubble_fraction
+
+P_STAGES, N_BLOCKS, N_MICRO = 4, 8, 6
+D = 16
+rng = np.random.default_rng(0)
+W = jnp.asarray(rng.standard_normal((N_BLOCKS, D, D)).astype(np.float32) * 0.2)
+x = jnp.asarray(rng.standard_normal((N_MICRO, 2, 4, D)).astype(np.float32))
+
+def block_fn(w, h):
+    return jnp.tanh(h @ w)
+
+# sequential reference
+def seq(x1):
+    def body(c, w):
+        return block_fn(w, c), None
+    out, _ = jax.lax.scan(body, x1, W)
+    return out
+ref = jax.vmap(seq)(x)
+
+mesh = make_test_mesh((P_STAGES,), ("pipe",))
+with mesh:
+    got = pipeline_forward(block_fn, W, x, mesh, axis="pipe")
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-5)
+print("bubble:", bubble_fraction(N_MICRO, P_STAGES))
+print("OK")
+""")
+    assert "OK" in out
+
+
+# --------------------------------------------------------------------------- #
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8, seed=7, kind="synthetic")
+    ds = Dataset(cfg)
+    b1 = ds.batch(5)
+    b2 = Dataset(cfg).batch(5)  # fresh instance, same step -> same batch
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # resume: state round-trips through the checkpoint manifest
+    st = ds.state(5)
+    assert Dataset.resume_step(st) == 5
+    # labels are next-token
+    full = np.concatenate([b1["tokens"], b1["labels"][:, -1:]], axis=1)
+    np.testing.assert_array_equal(full[:, 1:], b1["labels"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = dict(vocab=100, seq_len=8, global_batch=8, seed=3, kind="arith")
+    full = Dataset(DataConfig(**cfg)).batch(2)
+    parts = [
+        Dataset(DataConfig(**cfg, n_hosts=4, host_id=h)).batch(2)["tokens"]
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full["tokens"])
+
+
+def test_arith_data_is_learnable_pattern():
+    ds = Dataset(DataConfig(vocab=50, seq_len=10, global_batch=2, kind="arith"))
+    b = ds.batch(0)
+    t = b["tokens"]
+    # constant difference mod vocab within each row
+    d = np.diff(t, axis=1) % 50
+    assert (d == d[:, :1]).all()
+
+
+def test_memmap_dataset(tmp_path):
+    tokens = np.arange(1000, dtype=np.uint16) % 97
+    f = tmp_path / "toks.bin"
+    tokens.tofile(f)
+    ds = Dataset(DataConfig(vocab=97, seq_len=16, global_batch=4,
+                            kind="memmap", path=str(f)))
+    b = ds.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    b2 = ds.batch(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])

@@ -1,0 +1,119 @@
+"""Beyond-paper carry-in synthesis: reproduce the paper's cells automatically
+and extend to a format the paper never analyzed (E3M4)."""
+import numpy as np
+import pytest
+
+from repro.core import carry_ins
+from repro.core.formats import E4M3, E5M2
+from repro.core.rounding import MODES, Oracle
+from repro.core.synthesize import E3M4, OPS, achievability_table, synthesize
+
+
+def _grids(op):
+    if op in ("mul", "div"):
+        X, Y = np.meshgrid(np.arange(256, dtype=np.uint8),
+                           np.arange(256, dtype=np.uint8), indexing="ij")
+        return X.ravel(), Y.ravel()
+    return np.arange(256, dtype=np.uint8), None
+
+
+# Beyond-paper finding: the paper's "--" cells assume ONE constant per op
+# (shared across modes).  Allowing a per-mode constant (a mux the paper's
+# own combined multiplier already has), six more cells become achievable:
+EXTRA_ACHIEVABLE = {
+    ("e5m2", "sqrt", "rd"), ("e5m2", "sqrt", "rz"),
+    ("e5m2", "rsqrt", "rd"), ("e5m2", "rsqrt", "rz"),
+    ("e4m3", "sqrt", "ru"), ("e4m3", "rsqrt", "ru"),
+}
+
+
+@pytest.mark.parametrize("fmt", [E5M2, E4M3], ids=lambda f: f.name)
+def test_synthesis_covers_paper_and_finds_six_more(fmt):
+    """Every paper-achievable cell re-derives automatically; with per-mode
+    constants exactly six extra cells (marked '--' in Tables 2/3) become
+    achievable -- a constructive beyond-paper extension."""
+    extra = set()
+    for op in OPS:
+        for mode in MODES + ("faithful",):
+            paper = carry_ins.CARRY_INS[(fmt.name, op)][mode]
+            got = synthesize(fmt, op, mode)
+            if paper is not None:
+                assert got is not None, (fmt.name, op, mode)
+            elif got is not None:
+                extra.add((fmt.name, op, mode))
+    assert extra == {e for e in EXTRA_ACHIEVABLE if e[0] == fmt.name}
+
+
+@pytest.mark.parametrize("fmt", [E5M2, E4M3], ids=lambda f: f.name)
+@pytest.mark.parametrize("op", ["mul", "sqrt"])
+def test_synthesized_ops_are_correctly_rounded(fmt, op):
+    oracle = Oracle(fmt)
+    X, Y = _grids(op)
+    expected, valid = oracle.quantize_all(op, X, Y)
+    s = synthesize(fmt, op, "rne")
+    got = np.asarray(s.apply(X, Y))
+    assert ((got == expected["rne"]) | ~valid).all()
+
+
+def test_mantissa_precision_scaling_law():
+    """Beyond-paper: how far does the single-carry LNS construction reach as
+    mantissa precision grows?  Mitchell's log error (~0.086 in log2) is
+    ~0.086 * 2^m ulp per operand, so the +-1-carry correction must collapse
+    once it crosses 1 ulp:
+
+        E6M1: 42/42 cells   E5M2: 42/42 (per-mode constants)
+        E4M3: 33/42         E3M4:  5/42 (only the sqrt family, whose >>1
+                                         halves the log error)
+
+    Every synthesized cell is exhaustively validated by construction.
+    """
+    from repro.core.formats import FP8Format
+
+    expect = {(6, 1): 42, (5, 2): 42, (4, 3): 33, (3, 4): 5}
+    for (eb, mb), want in expect.items():
+        fmt = FP8Format(name=f"e{eb}m{mb}", exp_bits=eb, man_bits=mb,
+                        has_inf=(mb <= 2))
+        t = achievability_table(fmt)
+        n = sum(v for op in t.values() for v in op.values())
+        assert n == want, (fmt.name, n, t)
+
+
+def test_e3m4_beyond_paper():
+    """E3M4 (4 mantissa bits): only the sqrt family survives (the >>1 halves
+    the Mitchell error); multiplication is NOT even faithfully achievable —
+    the construction's precision ceiling, and those surviving cells are
+    exhaustively correct."""
+    fmt = E3M4
+    assert fmt.B == 3 << 4 == 48
+    table = achievability_table(fmt)
+    assert not table["mul"]["faithful"]  # precision ceiling
+    assert table["sqrt"]["rne"] and table["sqrt"]["faithful"]
+    assert table["rsqrt"]["faithful"]
+
+    oracle = Oracle(fmt)
+    for op, mode in [("sqrt", "rne"), ("sqrt", "rna"), ("sqrt", "rnz"),
+                     ("sqrt", "faithful"), ("rsqrt", "faithful")]:
+        s = synthesize(fmt, op, mode)
+        assert s is not None
+        X, Y = _grids(op)
+        expected, valid = oracle.quantize_all(op, X, Y)
+        got = np.asarray(s.apply(X, Y))
+        if mode == "faithful":
+            ok = (got == expected["rd"]) | (got == expected["ru"])
+        else:
+            ok = got == expected[mode]
+        assert (ok | ~valid).all(), (op, mode)
+
+
+def test_synthesized_luts_are_single_bit():
+    s = synthesize(E5M2, "mul", "rne")
+    assert set(np.unique(s.carry_lut)) <= {0, 1}
+    # the paper's eq. (7) fires on exactly the same inputs
+    X, Y = _grids("mul")
+    from repro.core.carry_ins import e5m2_mul_rne
+    from repro.core.rounding import Oracle
+
+    _, valid = Oracle(E5M2).quantize_all("mul", X, Y)
+    paper_cin = np.asarray(e5m2_mul_rne(X.astype(np.int64), Y.astype(np.int64)))
+    synth_cin = s.carry_lut[X, Y]
+    np.testing.assert_array_equal(paper_cin[valid], synth_cin[valid])
