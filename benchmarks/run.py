@@ -3,6 +3,15 @@
 Prints ``name,value,derived`` CSV rows (value is us_per_call for timing
 benches, a ratio/count otherwise).
 
+Usage::
+
+    python benchmarks/run.py [bench ...] [--json[=PATH]]
+
+Positional names select individual benchmarks (default: all).  ``--json``
+additionally writes the rows as ``{name: {value, derived, units}}`` to PATH
+(default ``BENCH_1.json`` at the repo root) so the perf trajectory is
+machine-tracked across PRs.
+
 Paper artifacts:
   table1_lns_throughput   Table 1 ops: vectorized LNS integer path vs
                           decode->f32->encode reference, CPU wall time.
@@ -33,18 +42,24 @@ import numpy as np
 ROWS = []
 
 
-def emit(name, value, derived=""):
-    ROWS.append((name, value, derived))
+def emit(name, value, derived="", units=""):
+    ROWS.append({"name": name, "value": value, "derived": derived, "units": units})
     print(f"{name},{value},{derived}")
 
 
 def _time(fn, *args, n=20, warmup=3):
+    """us per call, blocking every iteration.
+
+    Blocking only after the loop would let JAX's async dispatch pipeline the
+    n calls and under-report per-call latency; each iteration here waits for
+    its own result.  (If a pipelined-throughput number is ever wanted, add a
+    variant — don't weaken this one.)
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
@@ -187,21 +202,40 @@ def train_step_smoke():
 
 
 def lns_matmul_kernel():
+    """Perf trajectory of the paper-faithful LNS matmul (interpret mode).
+
+    Emits before/after rows at 512x512x512: ``seed_loop`` is the original
+    sequential rank-1 k-loop kernel (impl="lns_loop", kept as the baseline),
+    ``vectorized`` is the chunked [bm, ck, bn] broadcast kernel the models
+    use (impl="lns").  The speedup between the two is the number this PR's
+    acceptance tracks in BENCH_1.json.
+    """
     from repro.core.formats import E4M3
     from repro.kernels.lns_matmul import lns_matmul
     from repro.kernels import ref
 
     rng = np.random.default_rng(0)
     fmt = E4M3
-    M = K = N = 128
+    M = K = N = 512
     mags = rng.integers(fmt.min_normal_code, fmt.max_normal_code + 1, size=(M, K))
     x = jnp.asarray(mags.astype(np.uint8))
     w = jnp.asarray(rng.integers(fmt.min_normal_code, fmt.max_normal_code + 1,
                                  size=(K, N)).astype(np.uint8))
-    t_lns = _time(lambda a, b: lns_matmul(a, b, fmt="e4m3", interpret=True), x, w, n=3, warmup=1)
-    t_deq = _time(jax.jit(lambda a, b: ref.dequant_matmul_ref(a, b, "e4m3")), x, w, n=10)
-    emit("kernel/lns_matmul_128_interpret", f"{t_lns:.0f}",
-         f"us (Pallas interpret-mode, correctness path); xla_dequant={t_deq:.0f}us")
+    blocks = (128, 128, 128)
+    t_loop = _time(lambda a, b: lns_matmul(a, b, fmt="e4m3", impl="lns_loop",
+                                           blocks=blocks, interpret=True),
+                   x, w, n=3, warmup=1)
+    t_vec = _time(lambda a, b: lns_matmul(a, b, fmt="e4m3", impl="lns",
+                                          interpret=True), x, w, n=3, warmup=1)
+    t_deq = _time(jax.jit(lambda a, b: ref.dequant_matmul_ref(a, b, "e4m3")),
+                  x, w, n=10)
+    emit("kernel/lns_matmul_512/seed_loop", f"{t_loop:.0f}",
+         "us_per_call (Pallas interpret; the seed fori_loop kernel)", "us")
+    emit("kernel/lns_matmul_512/vectorized", f"{t_vec:.0f}",
+         f"us_per_call (Pallas interpret; chunked kernel) "
+         f"speedup_vs_seed={t_loop / t_vec:.2f}x xla_dequant={t_deq:.0f}us", "us")
+    emit("kernel/lns_matmul_512/speedup", f"{t_loop / t_vec:.2f}",
+         "seed_loop us / vectorized us, interpret mode", "x")
 
 
 def roofline_summary():
@@ -251,16 +285,45 @@ def flash_attention_kernel():
          "us (Pallas interpret-mode, correctness path)")
 
 
-def main() -> None:
-    table1_lns_throughput()
-    figs2_6_error_ulp()
-    tables2_3_validation()
-    table4_hw_proxy()
-    synthesis_scaling_law()
-    train_step_smoke()
-    lns_matmul_kernel()
-    flash_attention_kernel()
-    roofline_summary()
+BENCHES = {
+    "table1_lns_throughput": table1_lns_throughput,
+    "figs2_6_error_ulp": figs2_6_error_ulp,
+    "tables2_3_validation": tables2_3_validation,
+    "table4_hw_proxy": table4_hw_proxy,
+    "synthesis_scaling_law": synthesis_scaling_law,
+    "train_step_smoke": train_step_smoke,
+    "lns_matmul_kernel": lns_matmul_kernel,
+    "flash_attention_kernel": flash_attention_kernel,
+    "roofline_summary": roofline_summary,
+}
+
+
+def write_json(path: pathlib.Path) -> None:
+    out = {r["name"]: {"value": r["value"], "derived": r["derived"],
+                       "units": r["units"]} for r in ROWS}
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {len(out)} rows to {path}")
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    names = []
+    for a in argv:
+        if a == "--json":
+            json_path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_1.json"
+        elif a.startswith("--json="):
+            json_path = pathlib.Path(a.split("=", 1)[1])
+        elif a in BENCHES:
+            names.append(a)
+        else:
+            raise SystemExit(
+                f"unknown benchmark {a!r}; choose from {', '.join(BENCHES)}"
+            )
+    for name in names or BENCHES:
+        BENCHES[name]()
+    if json_path is not None:
+        write_json(json_path)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,9 @@ class QuantConfig:
     act_fmt: str = "e5m2"   # activations: wide-range format
     weight_fmt: str = "e4m3"  # weights: high-precision format
     mode: str = "rne"       # rounding mode for LNS ops
-    matmul_impl: str = "xla"  # xla | lns | fused_dequant (Pallas on TPU)
+    # auto: resolved per (shape, backend) by kernels.autotune (XLA on CPU,
+    # measured/cached Pallas choice on accelerators) | xla | lns | fused_dequant
+    matmul_impl: str = "auto"
     elementwise: bool = False  # route SwiGLU gating/rsqrt through LNS VPU ops
     static_weights: bool = False  # params stored as uint8 codes (inference)
     kv_cache_fp8: bool = False  # KV cache stored as E5M2 codes (decode)

@@ -1,0 +1,302 @@
+"""Block-size autotuner for the Pallas kernels, with a persistent cache.
+
+Every kernel entry point (``lns_matmul``, ``fp8_elementwise``,
+``flash_attention``) asks this module for its tiling when the caller does
+not pin one.  Answers come from, in order:
+
+  1. the on-disk cache (one JSON file, keyed by kernel kind, backend,
+     problem shape, format, impl and mode),
+  2. live measurement over a candidate grid — only when the backend can
+     actually run compiled Pallas (TPU/GPU) or when forced,
+  3. shape-aware heuristic defaults (always used in interpret mode, i.e.
+     the CPU correctness path, where timings would be meaningless for the
+     accelerator).
+
+Knobs (environment):
+
+  REPRO_AUTOTUNE        "0" never measure; "1"/"force" measure even in
+                        interpret mode; unset = measure on TPU/GPU only.
+  REPRO_AUTOTUNE_CACHE  cache file path
+                        (default ``~/.cache/repro/autotune.json``).
+
+The cache write is atomic (tmp file + rename) so concurrent processes at
+worst re-measure; measurement happens with explicit blocks, so the tuner
+never recurses into itself.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+_LOCK = threading.Lock()
+_CACHE: Optional[Dict[str, list]] = None
+
+# VMEM ceiling for candidate filtering (bytes); conservative vs 16 MiB/core.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return pathlib.Path(env).expanduser()
+    return pathlib.Path("~/.cache/repro/autotune.json").expanduser()
+
+
+def _load() -> Dict[str, list]:
+    global _CACHE
+    with _LOCK:
+        if _CACHE is None:
+            try:
+                _CACHE = json.loads(cache_path().read_text())
+            except (OSError, ValueError):
+                _CACHE = {}
+        return _CACHE
+
+
+def _store(key: str, value) -> None:
+    cache = _load()
+    with _LOCK:
+        cache[key] = list(value) if isinstance(value, (tuple, list)) else value
+        path = cache_path()
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(cache, f, indent=0, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass  # cache is an optimization; never fail the op over it
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process view (tests; external edits to the cache file)."""
+    global _CACHE
+    with _LOCK:
+        _CACHE = None
+
+
+def _should_measure(interpret: bool) -> bool:
+    env = os.environ.get("REPRO_AUTOTUNE", "").lower()
+    if env in ("0", "off", "never"):
+        return False
+    if env in ("1", "force", "always"):
+        return True
+    return not interpret and jax.default_backend() in ("tpu", "gpu")
+
+
+def _time_call(fn, n: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n
+
+
+def _measure_best(key: str, candidates: Sequence[tuple], make_fn, fallback):
+    """Time each candidate, cache and return the fastest (first on tie).
+
+    Only a config that actually ran is persisted; if every candidate fails
+    on this backend the (unmeasured) ``fallback`` is returned WITHOUT
+    caching, so later runs keep falling through to the heuristics instead
+    of replaying a frozen never-validated tiling."""
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        try:
+            t = _time_call(make_fn(cand))
+        except Exception:
+            continue  # candidate invalid on this backend; skip
+        if t < best_t:
+            best, best_t = cand, t
+    if best is None:
+        return fallback
+    _store(key, best)
+    return best
+
+
+# --------------------------------------------------------------------------- #
+# Matmul (lns / lns_loop / fused_dequant)
+# --------------------------------------------------------------------------- #
+def _matmul_candidates(M: int, N: int, K: int, impl: str) -> List[tuple]:
+    out: List[tuple] = []
+    for bm in (128, 256):
+        for bn in (128, 256):
+            for bk in (128, 256, 512):
+                if bm > M or bn > N or bk > K:
+                    continue
+                cks = (8, 16, 32) if impl == "lns" else (0,)
+                for ck in cks:
+                    # x + w code tiles, f32 out tile, ~6 [bm, ck, bn] i32/f32
+                    # temporaries for the chunked combine
+                    vmem = bm * bk + bk * bn + 4 * bm * bn + 24 * bm * ck * bn
+                    if vmem > _VMEM_BUDGET:
+                        continue
+                    out.append((bm, bn, bk, ck) if ck else (bm, bn, bk))
+    return out or [_matmul_default(M, N, K, impl)]
+
+
+def _matmul_default(M: int, N: int, K: int, impl: str,
+                    interpret: bool = False) -> tuple:
+    bm = min(128, M)
+    bn = min(128, N)
+    bk = min(128, K)
+    if impl == "lns":
+        # Interpret mode (CPU correctness/bench path) has no VMEM ceiling and
+        # favors the widest chunks; compiled TPU tiles must keep the
+        # [bm, ck, bn] temporaries a small slice of VMEM.
+        return (bm, bn, bk, 64 if interpret else 16)
+    return (bm, bn, bk)
+
+
+def matmul_blocks(
+    M: int, N: int, K: int, *, fmt: str, impl: str, mode: str = "rne",
+    interpret: bool = False,
+) -> tuple:
+    """(bm, bn, bk[, ck]) tiling for ``lns_matmul`` at this problem shape,
+    clamped/normalized so callers can use it directly."""
+    from .lns_matmul import normalize_blocks
+
+    def _norm(blocks):
+        blocks = normalize_blocks(tuple(blocks), M, N, K)
+        return blocks if impl == "lns" else blocks[:3]
+
+    backend = jax.default_backend()
+    key = f"matmul|{backend}|i{int(interpret)}|{M}x{N}x{K}|{fmt}|{impl}|{mode}"
+    cached = _load().get(key)
+    if cached is not None:
+        return _norm(cached)
+    if not _should_measure(interpret):
+        return _norm(_matmul_default(M, N, K, impl, interpret))
+
+    from .lns_matmul import lns_matmul
+
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(rng.integers(0, 256, size=(M, K)).astype(np.uint8))
+    w = jax.numpy.asarray(rng.integers(0, 256, size=(K, N)).astype(np.uint8))
+
+    def make_fn(blocks):
+        return lambda: lns_matmul(x, w, fmt=fmt, mode=mode, impl=impl,
+                                  blocks=blocks, interpret=interpret)
+
+    return _norm(_measure_best(key, _matmul_candidates(M, N, K, impl), make_fn,
+                               _matmul_default(M, N, K, impl, interpret)))
+
+
+def choose_matmul_impl(
+    M: int, N: int, K: int, *, fmt: str, w_fmt: Optional[str] = None,
+    mode: str = "rne", interpret: bool = False,
+) -> str:
+    """Resolve impl="auto": measured lns vs fused_dequant on accelerators,
+    XLA dequant on CPU (where Pallas only interprets)."""
+    env = os.environ.get("REPRO_MATMUL_IMPL")
+    if env:
+        return env
+    backend = jax.default_backend()
+    if backend == "cpu":
+        return "xla"
+    mixed = w_fmt is not None and w_fmt != fmt
+    if mixed:
+        return "fused_dequant"  # the LNS product is single-format
+    key = f"impl|{backend}|i{int(interpret)}|{M}x{N}x{K}|{fmt}|{mode}"
+    cached = _load().get(key)
+    if cached is not None:
+        return cached
+    if not _should_measure(interpret):
+        return "fused_dequant"  # MXU path: the safe default on accelerators
+
+    from .lns_matmul import lns_matmul
+
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(rng.integers(0, 256, size=(M, K)).astype(np.uint8))
+    w = jax.numpy.asarray(rng.integers(0, 256, size=(K, N)).astype(np.uint8))
+    best, best_t = "fused_dequant", float("inf")
+    for impl in ("fused_dequant", "lns"):
+        try:
+            t = _time_call(lambda impl=impl: lns_matmul(
+                x, w, fmt=fmt, mode=mode, impl=impl, interpret=interpret))
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = impl, t
+    _store(key, best)
+    return best
+
+
+# --------------------------------------------------------------------------- #
+# Elementwise (fp8_elementwise)
+# --------------------------------------------------------------------------- #
+def _elementwise_candidates(rows: int) -> List[int]:
+    return [r for r in (64, 128, 256, 512, 1024) if r <= max(rows, 64)]
+
+
+def elementwise_block_rows(
+    n_elements: int, *, fmt: str, op: str, mode: str = "rne",
+    interpret: bool = False,
+) -> int:
+    """Row-block size for the (rows, 128)-tiled elementwise kernel."""
+    rows = -(-n_elements // 128)
+    backend = jax.default_backend()
+    key = f"elemwise|{backend}|i{int(interpret)}|r{rows}|{fmt}|{op}|{mode}"
+    cached = _load().get(key)
+    if cached is not None:
+        return int(cached)
+    if not _should_measure(interpret):
+        return 256
+
+    from .fp8_elementwise import fp8_elementwise
+
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(rng.integers(0, 128, size=n_elements).astype(np.uint8))
+    y = jax.numpy.asarray(rng.integers(0, 128, size=n_elements).astype(np.uint8))
+    binary = op in ("mul", "div")
+
+    def make_fn(block_rows):
+        return lambda: fp8_elementwise(op, x, y if binary else None, fmt=fmt,
+                                       mode=mode, block_rows=block_rows,
+                                       interpret=interpret)
+
+    best = _measure_best(key, _elementwise_candidates(rows), make_fn, 256)
+    return int(best) if not isinstance(best, tuple) else int(best[0])
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention
+# --------------------------------------------------------------------------- #
+def flash_blocks(
+    Sq: int, Sk: int, hd: int, dv: int, *, interpret: bool = False,
+) -> Tuple[int, int]:
+    """(bq, bk) tiling for ``flash_attention``."""
+    backend = jax.default_backend()
+    key = f"flash|{backend}|i{int(interpret)}|{Sq}x{Sk}x{hd}x{dv}"
+    cached = _load().get(key)
+    if cached is not None:
+        return tuple(cached)
+    # mirror the kernel's historical guard: shrink to the sequence length
+    # only when it is itself sublane-aligned, otherwise keep 128 + padding
+    default = (min(128, Sq) if Sq % 8 == 0 else 128,
+               min(128, Sk) if Sk % 8 == 0 else 128)
+    if not _should_measure(interpret):
+        return default
+
+    from .flash_attention import flash_attention
+
+    rng = np.random.default_rng(0)
+    q = jax.numpy.asarray(rng.standard_normal((1, Sq, 4, hd)).astype(np.float32))
+    k = jax.numpy.asarray(rng.standard_normal((1, Sk, 4, hd)).astype(np.float32))
+    v = jax.numpy.asarray(rng.standard_normal((1, Sk, 4, dv)).astype(np.float32))
+    candidates = [(bq, bk) for bq in (64, 128, 256) for bk in (64, 128, 256)
+                  if bq <= Sq and bk <= Sk] or [default]
+
+    def make_fn(cand):
+        bq, bk = cand
+        return lambda: flash_attention(q, k, v, bq=bq, bk=bk, interpret=interpret)
+
+    return tuple(_measure_best(key, candidates, make_fn, default))

@@ -17,6 +17,7 @@ VMEM at (bq, bk) = (128, 128), hd = 128: q 32 KiB + k/v 64 KiB + acc
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..models.layers import NEG_INF
+from .common import CompilerParams
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -71,16 +73,39 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)).astype(o_ref.dtype)
 
 
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True, window: int = 0, cap: float = 0.0,
+    bq: Optional[int] = None, bk: Optional[int] = None, interpret: bool = False,
+):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd|dv]; returns [B, Sq, H, dv].
+
+    ``bq``/``bk`` default to the autotuner's tiling for (Sq, Sk, hd, dv);
+    pass explicit values to pin them.
+    """
+    if bq is None or bk is None:
+        from . import autotune
+
+        abq, abk = autotune.flash_blocks(
+            q.shape[1], k.shape[1], q.shape[-1], v.shape[-1], interpret=interpret
+        )
+        bq = abq if bq is None else bq
+        bk = abk if bk is None else bk
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, cap=cap,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "cap", "bq", "bk", "interpret"),
 )
-def flash_attention(
+def _flash_attention(
     q, k, v, *,
-    causal: bool = True, window: int = 0, cap: float = 0.0,
-    bq: int = 128, bk: int = 128, interpret: bool = False,
+    causal: bool, window: int, cap: float,
+    bq: int, bk: int, interpret: bool,
 ):
-    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd|dv]; returns [B, Sq, H, dv]."""
     B, Sq0, H, hd = q.shape
     _, Sk0, KV, dv = v.shape
     G = H // KV
@@ -122,7 +147,7 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

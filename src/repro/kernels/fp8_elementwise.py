@@ -12,14 +12,15 @@ uint8 codes out, saturating semantics (core.lns.lns_op).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import FORMATS
 from ..core.lns import lns_op
+from .common import CompilerParams
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 256
@@ -33,9 +34,6 @@ def _binary_kernel(x_ref, y_ref, o_ref, *, fmt, op, mode):
     o_ref[...] = lns_op(fmt, op, mode, x_ref[...], y_ref[...])
 
 
-@functools.partial(
-    jax.jit, static_argnames=("op", "fmt", "mode", "block_rows", "interpret")
-)
 def fp8_elementwise(
     op: str,
     x_codes,
@@ -43,10 +41,39 @@ def fp8_elementwise(
     *,
     fmt: str = "e4m3",
     mode: str = "rne",
-    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows: Optional[int] = None,
     interpret: bool = False,
 ):
-    """Apply a paper op to uint8 code tensors of any (broadcast-equal) shape."""
+    """Apply a paper op to uint8 code tensors of any (broadcast-equal) shape.
+
+    ``block_rows=None`` asks the autotuner (``kernels.autotune``) for the
+    row-tile size; pass an explicit value to pin it.
+    """
+    if block_rows is None:
+        from . import autotune
+
+        block_rows = autotune.elementwise_block_rows(
+            x_codes.size, fmt=fmt, op=op, mode=mode, interpret=interpret
+        )
+    return _fp8_elementwise(
+        op, x_codes, y_codes, fmt=fmt, mode=mode,
+        block_rows=block_rows, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "fmt", "mode", "block_rows", "interpret")
+)
+def _fp8_elementwise(
+    op: str,
+    x_codes,
+    y_codes=None,
+    *,
+    fmt: str,
+    mode: str,
+    block_rows: int,
+    interpret: bool,
+):
     assert x_codes.dtype == jnp.uint8
     shape = x_codes.shape
     n = x_codes.size
@@ -81,7 +108,7 @@ def fp8_elementwise(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows_p, LANES), jnp.uint8),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)
     return out.reshape(-1)[:n].reshape(shape)

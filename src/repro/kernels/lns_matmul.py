@@ -1,22 +1,36 @@
 """Pallas TPU kernels for FP8 matmul over uint8 LNS codes.
 
-Two implementations, both tiled for VMEM with explicit BlockSpecs:
+Three implementations, all tiled for VMEM with explicit BlockSpecs:
 
-* ``lns`` (paper-faithful): each scalar product is the paper's integer
-  addition ``X + Y + K + c_in`` on the raw codes (eqs. 6/29 + Tables 2/3
-  carry-ins), evaluated as whole [bm, bn] VPU tiles per k step; product
-  codes are decoded to f32 by exponent/mantissa bit placement (no LUT) and
-  accumulated in f32.  No floating-point multiplier is ever used — the
-  multiply cost is integer adds, exactly the paper's proposition.
+* ``lns`` (paper-faithful, vectorized): each scalar product is the paper's
+  integer addition ``X + Y + K + c_in`` on the raw codes (eqs. 6/29 +
+  Tables 2/3 carry-ins).  All per-operand work — sign/mantissa bit fields,
+  the per-operand halves of the factored carry-in expressions, the decode
+  constants — is hoisted out of the inner product (``common.lns_prepare``),
+  then K is processed in sub-chunks of ``ck`` codes as [bm, ck, bn]
+  broadcast integer tiles reduced over ck in one step: bk/ck wide VPU ops
+  instead of bk sequential rank-1 updates.  Product codes are decoded to
+  f32 by exponent/mantissa bit placement (no LUT) and accumulated in f32.
+  No floating-point multiplier is ever used — the multiply cost is integer
+  adds, exactly the paper's proposition.
+
+* ``lns_loop`` (the seed kernel, kept as the perf baseline): identical
+  numerics, but the K dimension is a ``fori_loop`` of rank-1 slices —
+  O(bk) sequential VPU steps per [bm, bn] tile.  Exists so the perf
+  trajectory harness (benchmarks/run.py --json) can keep proving the
+  vectorized kernel's speedup against it.
 
 * ``fused_dequant`` (beyond-paper TPU adaptation): decode both code tiles
   to ``compute_dtype`` once and feed the MXU.  Same numerics as
   decode-then-matmul, but fused so codes (1 byte/elem) are what crosses
-  HBM->VMEM: 2x less weight traffic than bf16.
+  HBM->VMEM: 2x less weight traffic than bf16.  Operands may use different
+  formats (e.g. E5M2 activations x E4M3 weights).
 
-VMEM budget at the default (128, 128, 128) blocks: x 16 KiB + w 16 KiB +
-out 64 KiB + [bm, bn] int32 temporaries ~ a few hundred KiB << 16 MiB/core.
-Matmul dims are multiples of 128 => MXU/VPU lane aligned.
+Block sizes come from ``kernels.autotune`` unless given explicitly; the
+``lns`` tiling is (bm, bn, bk, ck).  VMEM at the default (128, 128, 128, 16)
+blocks: x/w tiles 32 KiB + out 64 KiB + [bm, ck, bn] int32/f32 temporaries
+~ a few MiB << 16 MiB/core.  Matmul dims are multiples of 128 => MXU/VPU
+lane aligned.
 """
 from __future__ import annotations
 
@@ -25,16 +39,57 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import FORMATS
-from .common import code_to_f32, lns_mul_to_f32
+from .common import CompilerParams, LNSOperand, code_to_f32, lns_combine, lns_mul_to_f32, lns_prepare
 
 DEFAULT_BLOCKS = (128, 128, 128)
+DEFAULT_CK = 16
 
 
-def _lns_kernel(x_ref, w_ref, o_ref, *, fmt, mode, bk):
-    """Grid (M/bm, N/bn, K/bk), K innermost; o block revisited across k."""
+def _slice_operand(p: LNSOperand, k0, ck: int, axis: int) -> LNSOperand:
+    """Slice every per-element field of a prepared operand along ``axis``."""
+    return LNSOperand(*(
+        None if f is None else jax.lax.dynamic_slice_in_dim(f, k0, ck, axis=axis)
+        for f in p
+    ))
+
+
+def _expand(p: LNSOperand, expander) -> LNSOperand:
+    return LNSOperand(*(None if f is None else expander(f) for f in p))
+
+
+def _lns_kernel(x_ref, w_ref, o_ref, *, fmt, mode, bk, ck):
+    """Grid (M/bm, N/bn, K/bk), K innermost; o block revisited across k.
+
+    Per-operand bit logic runs once per tile; the inner product is bk/ck
+    vectorized [bm, ck, bn] combine+reduce steps.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    px = lns_prepare(x_ref[...], fmt, mode, side="x")  # fields [bm, bk]
+    pw = lns_prepare(w_ref[...], fmt, mode, side="y")  # fields [bk, bn]
+
+    def chunk(c, acc):
+        k0 = c * ck
+        pxs = _expand(_slice_operand(px, k0, ck, axis=1), lambda f: f[:, :, None])
+        pws = _expand(_slice_operand(pw, k0, ck, axis=0), lambda f: f[None, :, :])
+        prod = lns_combine(pxs, pws, fmt)  # [bm, ck, bn] f32
+        return acc + prod.sum(axis=1)
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    if bk == ck:
+        acc = chunk(0, acc)
+    else:
+        acc = jax.lax.fori_loop(0, bk // ck, chunk, acc)
+    o_ref[...] += acc
+
+
+def _lns_loop_kernel(x_ref, w_ref, o_ref, *, fmt, mode, bk):
+    """The seed kernel: sequential rank-1 k-loop.  Perf baseline only."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -46,21 +101,19 @@ def _lns_kernel(x_ref, w_ref, o_ref, *, fmt, mode, bk):
     def body(k, acc):
         xk = jax.lax.dynamic_slice_in_dim(x, k, 1, axis=1)  # [bm, 1]
         wk = jax.lax.dynamic_slice_in_dim(w, k, 1, axis=0)  # [1, bn]
-        # The paper's multiplier: one integer add + carry-in per product,
-        # decoded wide (see lns_mul_to_f32) for saturation-free accumulation.
         return acc + lns_mul_to_f32(xk, wk, fmt, mode)  # [bm, bn] f32
 
     acc = jax.lax.fori_loop(0, bk, body, jnp.zeros(o_ref.shape, jnp.float32))
     o_ref[...] += acc
 
 
-def _dequant_kernel(x_ref, w_ref, o_ref, *, fmt, compute_dtype):
+def _dequant_kernel(x_ref, w_ref, o_ref, *, fmt, w_fmt, compute_dtype):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = code_to_f32(x_ref[...], fmt).astype(compute_dtype)
-    w = code_to_f32(w_ref[...], fmt).astype(compute_dtype)
+    w = code_to_f32(w_ref[...], w_fmt).astype(compute_dtype)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
@@ -72,10 +125,22 @@ def _pad_to(a, m0, m1):
     return a
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("fmt", "mode", "impl", "blocks", "interpret", "compute_dtype"),
-)
+def normalize_blocks(blocks, M: int, N: int, K: int):
+    """Clamp a (bm, bn, bk[, ck]) request to the problem and tile grids.
+
+    ``ck`` is clamped to the largest divisor of the (clamped) bk not above
+    the request, so the chunked kernel always covers bk exactly.
+    """
+    if len(blocks) == 3:
+        blocks = (*blocks, DEFAULT_CK)
+    bm, bn, bk, ck = blocks
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    ck = max(1, min(ck, bk))
+    while bk % ck:
+        ck -= 1
+    return bm, bn, bk, ck
+
+
 def lns_matmul(
     x_codes,
     w_codes,
@@ -83,17 +148,50 @@ def lns_matmul(
     fmt: str = "e4m3",
     mode: str = "rne",
     impl: str = "lns",
-    blocks=DEFAULT_BLOCKS,
+    blocks=None,
     interpret: bool = False,
     compute_dtype=jnp.float32,
+    w_fmt: str | None = None,
 ):
-    """f32[M, N] matmul of uint8 FP8 code matrices (scales applied by caller)."""
-    assert x_codes.dtype == jnp.uint8 and w_codes.dtype == jnp.uint8
+    """f32[M, N] matmul of uint8 FP8 code matrices (scales applied by caller).
+
+    ``blocks`` is (bm, bn, bk) or (bm, bn, bk, ck); None asks the autotuner
+    (``kernels.autotune``), which serves measured tilings from its on-disk
+    cache or sensible defaults.  ``w_fmt`` (fused_dequant only) lets the two
+    operands use different FP8 formats.
+    """
     M, K = x_codes.shape
     K2, N = w_codes.shape
     assert K == K2, (x_codes.shape, w_codes.shape)
-    bm, bn, bk = blocks
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    if w_fmt is None:
+        w_fmt = fmt
+    if impl in ("lns", "lns_loop") and w_fmt != fmt:
+        raise ValueError("the paper's LNS product is single-format; use fused_dequant")
+    if blocks is None:
+        from . import autotune
+
+        blocks = autotune.matmul_blocks(M, N, K, fmt=fmt, impl=impl,
+                                        mode=mode, interpret=interpret)
+    bm, bn, bk, ck = normalize_blocks(blocks, M, N, K)
+    return _lns_matmul(
+        x_codes, w_codes, fmt=fmt, mode=mode, impl=impl,
+        blocks=(bm, bn, bk, ck), interpret=interpret,
+        compute_dtype=compute_dtype, w_fmt=w_fmt,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "mode", "impl", "blocks", "interpret",
+                     "compute_dtype", "w_fmt"),
+)
+def _lns_matmul(
+    x_codes, w_codes, *, fmt, mode, impl, blocks, interpret, compute_dtype, w_fmt
+):
+    assert x_codes.dtype == jnp.uint8 and w_codes.dtype == jnp.uint8
+    M, K = x_codes.shape
+    _, N = w_codes.shape
+    bm, bn, bk, ck = blocks
 
     xp = _pad_to(x_codes, bm, bk)
     wp = _pad_to(w_codes, bk, bn)
@@ -102,10 +200,17 @@ def lns_matmul(
     grid = (Mp // bm, Np // bn, Kp // bk)
 
     if impl == "lns":
-        kernel = functools.partial(_lns_kernel, fmt=FORMATS[fmt], mode=mode, bk=bk)
+        kernel = functools.partial(
+            _lns_kernel, fmt=FORMATS[fmt], mode=mode, bk=bk, ck=ck
+        )
+    elif impl == "lns_loop":
+        kernel = functools.partial(
+            _lns_loop_kernel, fmt=FORMATS[fmt], mode=mode, bk=bk
+        )
     elif impl == "fused_dequant":
         kernel = functools.partial(
-            _dequant_kernel, fmt=FORMATS[fmt], compute_dtype=compute_dtype
+            _dequant_kernel, fmt=FORMATS[fmt], w_fmt=FORMATS[w_fmt],
+            compute_dtype=compute_dtype,
         )
     else:
         raise ValueError(f"unknown impl {impl!r}")
@@ -119,7 +224,7 @@ def lns_matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

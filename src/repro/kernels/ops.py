@@ -36,27 +36,42 @@ def matmul_q(
     mode: str = "rne",
     interpret: Optional[bool] = None,
     compute_dtype=jnp.bfloat16,
+    blocks=None,
 ):
     """Quantized matmul: [M, K] @ [K, N] -> f32 [M, N], scales applied.
 
     Per-tensor scales or per-channel scales on non-contracted axes.
+    ``impl="auto"`` picks per (shape, backend) via the autotuner (XLA on
+    CPU, measured/cached Pallas choice on accelerators); ``blocks=None``
+    likewise defers the Pallas tiling to the autotuner.
     """
     if interpret is None:
         interpret = _on_cpu()
+    if impl == "auto":
+        from . import autotune
+
+        M, K = x.codes.shape
+        N = w.codes.shape[1]
+        impl = autotune.choose_matmul_impl(
+            M, N, K, fmt=x.fmt, w_fmt=w.fmt, mode=mode, interpret=interpret
+        )
     if impl == "xla":
         acc = ref.dequant_matmul_ref(
-            x.codes, w.codes, x.fmt, compute_dtype=compute_dtype
+            x.codes, w.codes, x.fmt, w_fmt=w.fmt, compute_dtype=compute_dtype
         )
-    elif impl in ("lns", "fused_dequant"):
-        assert x.fmt == w.fmt, "operands must share a format"
+    elif impl in ("lns", "lns_loop", "fused_dequant"):
+        if impl != "fused_dequant":
+            assert x.fmt == w.fmt, "the LNS product is single-format"
         acc = lns_matmul(
             x.codes,
             w.codes,
             fmt=x.fmt,
+            w_fmt=w.fmt,
             mode=mode,
             impl=impl,
             interpret=interpret,
             compute_dtype=compute_dtype,
+            blocks=blocks,
         )
     else:
         raise ValueError(f"unknown impl {impl!r}")

@@ -35,12 +35,19 @@ def lns_matmul_ref(
 
 
 def dequant_matmul_ref(
-    x_codes, w_codes, fmt="e4m3", *, x_scale=1.0, w_scale=1.0, compute_dtype=jnp.float32
+    x_codes, w_codes, fmt="e4m3", *, w_fmt=None, x_scale=1.0, w_scale=1.0,
+    compute_dtype=jnp.float32
 ):
-    """The MXU-path oracle: decode both operands, dense matmul, scale."""
+    """The MXU-path oracle: decode both operands, dense matmul, scale.
+
+    ``w_fmt`` lets the weight operand use its own format (mixed E5M2
+    activations x E4M3 weights); defaults to ``fmt``.
+    """
     if isinstance(fmt, str):
         fmt = FORMATS[fmt]
+    if w_fmt is None:
+        w_fmt = fmt
     x = code_to_f32(x_codes, fmt).astype(compute_dtype)
-    w = code_to_f32(w_codes, fmt).astype(compute_dtype)
+    w = code_to_f32(w_codes, w_fmt).astype(compute_dtype)
     acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
     return acc * jnp.asarray(x_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)

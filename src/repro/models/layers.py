@@ -93,10 +93,22 @@ def qlinear(x, w, qcfg, b=None):
     """[..., D_in] @ [D_in, D_out]; FP8-LNS path when qcfg.enabled.
 
     ``w`` may be a static-quantized {"codes", "scale"} dict (weight-only
-    FP8): it is decoded by integer bit placement right before the matmul,
-    so only 1 byte/param crosses HBM.
+    FP8).  With activation quantization on, the stored codes feed the
+    quantized matmul directly (impl/blocks picked by the autotuner — see
+    models.quantize.static_qmatmul); otherwise the weight is decoded by
+    integer bit placement right before the matmul.  Either way only
+    1 byte/param crosses HBM.
     """
     if isinstance(w, dict) and "codes" in w:
+        if qcfg is not None and qcfg.enabled and qcfg.act_quant:
+            from .quantize import static_qmatmul
+
+            shape = x.shape
+            y = static_qmatmul(x.reshape(-1, shape[-1]), w, qcfg)
+            y = y.reshape(*shape[:-1], w["codes"].shape[-1]).astype(x.dtype)
+            if b is not None:
+                y = y + b
+            return y
         from .quantize import resolve_weight
 
         w = resolve_weight(w, qcfg.weight_fmt if qcfg else "e4m3", x.dtype)

@@ -51,3 +51,29 @@ def resolve_weight(w, fmt: str = "e4m3", dtype=jnp.bfloat16):
 
         return (code_to_f32(w["codes"], fmt) * w["scale"]).astype(dtype)
     return w
+
+
+def static_qmatmul(x2d, w, qcfg):
+    """[M, K] @ static-quantized weight dict -> f32 [M, N], codes end-to-end.
+
+    The fast path for quantized matmuls against static weights: activations
+    are quantized to codes and multiplied against the *stored* weight codes
+    by ``kernels.ops.matmul_q`` (impl and Pallas blocks resolved by the
+    autotuner), so the weight never takes a decode->f32->re-encode round
+    trip and only 1 byte/param crosses HBM.
+
+    The paper's LNS product is single-format: when ``matmul_impl`` pins
+    ``lns``/``lns_loop`` and the stored weight format differs from
+    ``act_fmt``, activations are quantized in the weight's format instead.
+    """
+    from ..core.quant import QTensor, quantize
+    from ..kernels import ops as kops
+
+    w_fmt = qcfg.weight_fmt
+    act_fmt = qcfg.act_fmt
+    if qcfg.matmul_impl in ("lns", "lns_loop") and act_fmt != w_fmt:
+        act_fmt = w_fmt
+    qx = quantize(x2d, act_fmt, mode=qcfg.mode)
+    qw = QTensor(codes=w["codes"], scale=jnp.asarray(w["scale"], jnp.float32),
+                 fmt=w_fmt)
+    return kops.matmul_q(qx, qw, impl=qcfg.matmul_impl, mode=qcfg.mode)

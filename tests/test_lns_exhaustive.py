@@ -86,6 +86,118 @@ def test_correct_rounding_modes_bracket_faithful(fmt, op):
     assert np.all(np.abs(vals["rz"][v]) <= np.abs(vals["rne"][v]))
 
 
+# --------------------------------------------------------------------------- #
+# Kernel equivalence: the chunked/vectorized Pallas `lns` matmul must produce
+# the SAME product bits as the per-element wide-decode oracle for every code
+# pair, format and supported rounding mode — the numerics contract of the
+# vectorization (hoisted bit logic, factored carry-ins, folded constants).
+# --------------------------------------------------------------------------- #
+_MUL_CELLS = [
+    (fmt, mode)
+    for fmt in FORMATS
+    for mode in MODES + ("faithful",)
+    if carry_ins.CARRY_INS[(fmt.name, "mul")][mode] is not None
+]
+_mul_ids = lambda c: str(getattr(c, "name", c))
+
+
+@pytest.mark.parametrize("fmt,mode", _MUL_CELLS, ids=_mul_ids)
+def test_factored_mul_carry_matches_direct_expression(fmt, mode):
+    """The per-operand factored form (carry_ins.FACTORED_MUL) is exactly the
+    Table 2/3 expression, over all 256x256 raw code pairs."""
+    X, Y = _grids("mul")
+    Xi, Yi = X.astype(np.int64), Y.astype(np.int64)
+    want = carry_ins.carry_in(fmt.name, "mul", mode, Xi, Yi)
+    const = carry_ins.mul_carry_constant(fmt.name, mode)
+    if const is not None:
+        assert isinstance(want, int) and want == const
+        assert carry_ins.mul_carry_term_mask(fmt.name, mode, Xi, "x") is None
+        return
+    mx = carry_ins.mul_carry_term_mask(fmt.name, mode, Xi, "x")
+    my = carry_ins.mul_carry_term_mask(fmt.name, mode, Yi, "y")
+    got = ((mx & my) != 0).astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt,mode", _MUL_CELLS, ids=_mul_ids)
+def test_lns_kernel_products_bit_exact_all_pairs(fmt, mode):
+    """All 256x256 products through the vectorized Pallas kernel == the
+    per-element lns_mul_to_f32 oracle, bitwise (K=1, so no accumulation)."""
+    from repro.kernels.common import lns_mul_to_f32
+    from repro.kernels.lns_matmul import lns_matmul
+
+    import jax.numpy as jnp
+
+    codes = np.arange(256, dtype=np.uint8)
+    got = lns_matmul(
+        jnp.asarray(codes[:, None]), jnp.asarray(codes[None, :]),
+        fmt=fmt.name, mode=mode, impl="lns", interpret=True,
+    )
+    want = lns_mul_to_f32(
+        jnp.asarray(codes)[:, None], jnp.asarray(codes)[None, :], fmt, mode
+    )
+    # assert_array_equal treats NaN==NaN; everything else must match bitwise
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt,mode", _MUL_CELLS, ids=_mul_ids)
+def test_wide_decode_matches_raw_codes_in_range(fmt, mode):
+    """Independent anchor for the wide decode: wherever the paper's mod-256
+    result is a normal code (normal operands, in-range product), the wide
+    f32 decode must equal the exact decode of that code."""
+    from repro.kernels.common import lns_mul_to_f32
+
+    X, Y = _grids("mul")
+    Xi, Yi = X.astype(np.int64), Y.astype(np.int64)
+    mx, my = Xi & 0x7F, Yi & 0x7F
+    cin = carry_ins.carry_in(fmt.name, "mul", mode, Xi, Yi)
+    K = lns.LNS_CONSTS[(fmt.name, "mul")]
+    mag = mx + my + (K - 256) + cin  # unwrapped magnitude code
+    normal_ops = (
+        (mx >= fmt.min_normal_code) & (mx <= fmt.max_normal_code)
+        & (my >= fmt.min_normal_code) & (my <= fmt.max_normal_code)
+    )
+    in_range = normal_ops & (mag >= fmt.min_normal_code) & (mag <= fmt.max_normal_code)
+    assert in_range.sum() > 0
+    raw = np.asarray(lns.lns_op_raw(fmt, "mul", mode, X, Y))
+    exact = fmt.decode(raw).astype(np.float32)
+    wide = np.asarray(lns_mul_to_f32(X, Y, fmt, mode))
+    np.testing.assert_array_equal(wide[in_range], exact[in_range])
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+@pytest.mark.parametrize(
+    "shape,blocks",
+    [((100, 70, 50), (32, 32, 32, 8)),   # every dim ragged vs the tile
+     ((129, 3, 257), None),              # K smaller than any ck; autotuned
+     ((8, 200, 8), (128, 128, 128, 16))],  # blocks larger than the problem
+    ids=["ragged", "tiny-k-autotuned", "clamped"],
+)
+def test_lns_kernel_padded_shapes_match_oracle(fmt, shape, blocks):
+    """Non-128-multiple shapes exercise _pad_to + block clamping; compare to
+    the materialized per-element oracle within f32 resummation tolerance."""
+    from repro.kernels import ref
+    from repro.kernels.lns_matmul import lns_matmul
+
+    import jax.numpy as jnp
+
+    M, K, N = shape
+    rng = np.random.default_rng(0)
+
+    def rand(sz):
+        mags = rng.integers(fmt.min_normal_code, fmt.max_normal_code + 1, size=sz)
+        signs = rng.integers(0, 2, size=sz) << 7
+        return jnp.asarray((mags | signs).astype(np.uint8))
+
+    x, w = rand((M, K)), rand((K, N))
+    got = lns_matmul(x, w, fmt=fmt.name, impl="lns", interpret=True, blocks=blocks)
+    want = ref.lns_matmul_ref(x, w, fmt.name, "rne")
+    sum_abs = np.asarray(ref.lns_matmul_ref(x & 0x7F, w & 0x7F, fmt.name, "rne"))
+    tol = (K + 2) * np.finfo(np.float32).eps * sum_abs + 1e-6
+    err = np.abs(np.asarray(got) - np.asarray(want))
+    assert np.all(err <= tol), f"max excess {np.max(err - tol)}"
+
+
 def test_e5m2_mul_error_bounds():
     """Fig. 2: raw E5M2 mul error vs exact is within [0, 0.5] ulp downward."""
     fmt = E5M2
