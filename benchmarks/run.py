@@ -272,6 +272,38 @@ def synthesis_scaling_law():
              "ops x modes with an integer+carry implementation")
 
 
+def serve_decode():
+    """Serving decode: dense vs paged cache backends (smoke scale).
+
+    Records tok/s and cache bytes per token of capacity for the FP8 paged
+    pool vs the dense per-slot cache (plus the bf16 dense baseline for the
+    memory headline).  Written to BENCH_2.json by the PR-2 acceptance run:
+    ``python benchmarks/run.py serve_decode --json=BENCH_2.json``.
+    """
+    from repro.configs import get_config
+    from repro.launch import serve
+
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, 256, size=8) for _ in range(6)]
+    cells = [
+        ("fp8_w8kv8", "paged"),
+        ("fp8_w8kv8", "dense"),
+        ("none", "dense"),
+    ]
+    for quant, impl in cells:
+        cfg = get_config("qwen2-0.5b", smoke=True, quant=quant)
+        eng = serve.Engine(cfg, slots=3, max_seq=24, cache_impl=impl,
+                           page_size=8)
+        _, stats = serve.run(eng, [q.copy() for q in queue], gen=16,
+                             quiet=True)
+        tag = f"serve_decode/qwen2-0.5b-smoke/{quant}/{impl}"
+        emit(f"{tag}/tok_s", f"{stats['tok_s']:.2f}",
+             f"steps={stats['steps']} slots=3 gen=16 cpu", "tok/s")
+        emit(f"{tag}/cache_bytes_per_token",
+             f"{stats['cache_bytes_per_token']:.1f}",
+             f"cache_bytes={stats['cache_bytes']}", "B/token")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -294,6 +326,7 @@ BENCHES = {
     "train_step_smoke": train_step_smoke,
     "lns_matmul_kernel": lns_matmul_kernel,
     "flash_attention_kernel": flash_attention_kernel,
+    "serve_decode": serve_decode,
     "roofline_summary": roofline_summary,
 }
 

@@ -1,6 +1,8 @@
-"""Batched serving with continuous batching (smoke scale).
+"""Batched serving with continuous batching on the paged KV cache.
 
-Run:  PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-780m]
+Run:  PYTHONPATH=src python examples/serve_batched.py \
+          [--arch qwen2-0.5b] [--requests 6] [--slots 3] [--gen 12] \
+          [--quant fp8_w8kv8] [--cache-impl paged] [--page-size 8]
 """
 import pathlib
 import sys
@@ -15,10 +17,20 @@ from repro.launch import serve
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--quant", default="fp8_w8kv8")
+    ap.add_argument("--cache-impl", default="paged", choices=["paged", "dense"])
+    ap.add_argument("--page-size", type=int, default=8)
     args = ap.parse_args()
     serve.main([
         "--arch", args.arch, "--smoke",
-        "--requests", "6", "--slots", "3", "--gen", "12", "--prompt-len", "8",
+        "--requests", str(args.requests), "--slots", str(args.slots),
+        "--gen", str(args.gen), "--prompt-len", str(args.prompt_len),
+        "--quant", args.quant,
+        "--cache-impl", args.cache_impl, "--page-size", str(args.page_size),
     ])
 
 

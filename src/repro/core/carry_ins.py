@@ -22,6 +22,9 @@ __all__ = [
     "CARRY_INS",
     "FACTORED_MUL",
     "carry_in",
+    "directed_pair",
+    "stochastic_carry_in",
+    "supports_stochastic",
     "mul_carry_term_mask",
     "mul_carry_constant",
     "Unsupported",
@@ -394,6 +397,54 @@ def carry_in(fmt_name: str, op: str, mode: str, X, Y=None):
     if isinstance(spec, int):
         return spec
     return spec(X, Y)
+
+
+# --------------------------------------------------------------------------- #
+# Stochastic rounding as a carry-in.
+#
+# The directed modes RD and RU of Tables 2/3 bracket the exact result, and
+# both are realized by a single carry-in bit into the same integer LNS
+# expression.  Selecting between the two expressions with a uniform random
+# bit therefore yields stochastic rounding *in the carry-in domain*: the
+# result is always one of the two faithful answers, and the hardware cost is
+# the same one-bit carry (a 2:1 mux on the two boolean expressions).  This is
+# the rounding the serving KV-cache uses for page writes/rescales, where
+# directional bias would accumulate over thousands of decode steps.
+# --------------------------------------------------------------------------- #
+def directed_pair(fmt_name: str, op: str) -> Tuple[CarrySpec, CarrySpec]:
+    """The (RD, RU) carry-in specs for (format, op); Unsupported if either
+    direction has no integer expression (a dash in Tables 2/3)."""
+    table = CARRY_INS[(fmt_name, op)]
+    rd, ru = table["rd"], table["ru"]
+    if rd is None or ru is None:
+        raise Unsupported(
+            f"{fmt_name} {op}: stochastic rounding needs both RD and RU "
+            "carry-in expressions"
+        )
+    return rd, ru
+
+
+def supports_stochastic(fmt_name: str, op: str) -> bool:
+    try:
+        directed_pair(fmt_name, op)
+        return True
+    except Unsupported:
+        return False
+
+
+def stochastic_carry_in(fmt_name: str, op: str, X, Y=None, *, rbits):
+    """Carry-in bit for stochastic rounding: the RD expression when the
+    random bit is 0, the RU expression when it is 1.
+
+    ``rbits`` is a {0,1} integer array broadcastable against the operands
+    (one independent uniform bit per element).  Works on numpy and
+    jax.numpy inputs alike, and inside jit/Pallas.
+    """
+    rd, ru = directed_pair(fmt_name, op)
+    c_rd = rd if isinstance(rd, int) else rd(X, Y)
+    c_ru = ru if isinstance(ru, int) else ru(X, Y)
+    r = rbits & 0x1
+    return (c_rd & (r ^ 0x1)) | (c_ru & r)
 
 
 # --------------------------------------------------------------------------- #

@@ -24,7 +24,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from .carry_ins import CARRY_INS, Unsupported, carry_in
+from .carry_ins import CARRY_INS, Unsupported, carry_in, stochastic_carry_in
 from .formats import E4M3, E5M2, FORMATS, FP8Format
 
 __all__ = [
@@ -87,16 +87,30 @@ def _lns_core(fmt: FP8Format, op: str, X, Y=None):
     raise ValueError(f"unknown op {op!r}")
 
 
-def lns_op_raw(fmt: FP8Format | str, op: str, mode: str, X, Y=None):
+def _carry(fmt: FP8Format, op: str, mode: str, X, Y=None, rbits=None):
+    """Mode-dispatching carry-in: Table 2/3 expression, or the stochastic
+    RD/RU selection when mode == "stochastic" (needs ``rbits``)."""
+    if mode == "stochastic":
+        if rbits is None:
+            raise ValueError("mode='stochastic' needs rbits ({0,1} array)")
+        return stochastic_carry_in(fmt.name, op, X, Y, rbits=rbits)
+    return carry_in(fmt.name, op, mode, X, Y)
+
+
+def lns_op_raw(fmt: FP8Format | str, op: str, mode: str, X, Y=None, *, rbits=None):
     """Paper-faithful mod-256 integer expression.  Returns uint8 codes.
 
     Only meaningful on the paper's domain (normal operands, normal result);
     outside it the mod-256 wraparound produces garbage by design -- exactly
     like the minimal hardware circuit the paper synthesizes.
+
+    ``mode="stochastic"`` selects per element between the RD and RU carry-in
+    expressions with ``rbits`` (a {0,1} array) — stochastic rounding realized
+    as a carry-in (see carry_ins.stochastic_carry_in).
     """
     if isinstance(fmt, str):
         fmt = FORMATS[fmt]
-    cin = carry_in(fmt.name, op, mode, X, Y)
+    cin = _carry(fmt, op, mode, X, Y, rbits)
     core = _lns_core(fmt, op, X, Y)
     K = LNS_CONSTS[(fmt.name, op)]
     out = (core + K + cin) & 0xFF
@@ -148,7 +162,7 @@ def _signed_lns_parts(fmt: FP8Format, op: str, X, Y=None):
     return sign, mag
 
 
-def lns_op(fmt: FP8Format | str, op: str, mode: str, X, Y=None):
+def lns_op(fmt: FP8Format | str, op: str, mode: str, X, Y=None, *, rbits=None):
     """Saturating/guarded LNS op for production use on full uint8 tensors.
 
     Semantics outside the paper's domain:
@@ -159,13 +173,16 @@ def lns_op(fmt: FP8Format | str, op: str, mode: str, X, Y=None):
       * overflow   -> +-max_normal
       * underflow  -> +-0 (flush)
       * sqrt/rsqrt of negative               -> NaN
+
+    ``mode="stochastic"`` (with ``rbits``, a {0,1} array) picks per element
+    between the RD and RU carry-in expressions — unbiased faithful rounding.
     """
     if isinstance(fmt, str):
         fmt = FORMATS[fmt]
     Xi = jnp.asarray(X).astype(jnp.int32)
     Yi = jnp.asarray(Y).astype(jnp.int32) if Y is not None else None
 
-    cin = carry_in(fmt.name, op, mode, Xi, Yi)
+    cin = _carry(fmt, op, mode, Xi, Yi, rbits)
     sign, mag = _signed_lns_parts(fmt, op, Xi, Yi)
     mag = mag + cin
 

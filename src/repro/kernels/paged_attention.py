@@ -1,0 +1,341 @@
+"""Pallas TPU paged decode attention with integer-domain (LNS) QK^T.
+
+The serving subsystem stores the KV cache as fixed-size pages of raw FP8
+codes plus one f32 scale per page (``repro.serving.page_pool``).  This
+kernel consumes that layout directly: for each batch slot it visits the
+slot's block-table pages, computes the q·k dot products **in the paper's
+LNS integer domain** — code add + Table-2/3 carry-in via the shared
+``lns_prepare``/``lns_combine`` machinery from ``kernels.common`` — and
+decodes to float32 only for the softmax / PV stage.  The FP8 codes are what
+crosses HBM: at 1 byte/elem + one scale per page, decode-attention HBM
+traffic is ~half of a bf16 cache, and no float multiplier touches the QK^T
+products.
+
+Structure: flash-decoding style two-phase split.  Phase 1 (the Pallas
+kernel, grid (B, max_pages), both axes parallel) emits per-page softmax
+partials (m, l, unnormalized o) — pages are independent, so there is no
+sequential carry and the grid parallelizes freely.  Phase 2 (plain jnp,
+shared verbatim by the kernel wrapper and the pure-JAX reference) merges
+the partials with the standard log-sum-exp combine.  Block tables and
+per-slot lengths ride in as scalar-prefetch operands so the k/v BlockSpec
+index maps can gather pages (``bt[b, j]``); pages a slot does not own are
+masked out entirely and contribute weight exp(-inf) = 0 in the combine.
+
+Numerics contract: ``impl="kernel"`` (interpret on CPU) is bit-identical to
+``impl="ref"`` — both run the same per-page function and the same combine,
+and every order-sensitive f32 reduction is pinned behind
+``jax.lax.optimization_barrier`` so XLA cannot re-vectorize or FMA-contract
+one side differently (``tests/test_paged_serving.py`` pins this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import FORMATS
+from ..core.quant import encode
+from .common import CompilerParams, code_to_f32, lns_combine, lns_prepare
+
+NEG_INF = -2.0e30
+
+
+# --------------------------------------------------------------------------- #
+# Q quantization (shared by kernel, reference and tests so the paged paths
+# agree bit-for-bit on the quantized query).
+# --------------------------------------------------------------------------- #
+def quantize_q(q, fmt: str, mode: str = "rne"):
+    """[B, H, hd] float -> (codes [B, H, hd] uint8, scale [B] f32).
+
+    One scale per slot (the query is a single token; per-slot absmax keeps
+    the full exponent range of the format in play).
+    """
+    fmt_obj = FORMATS[fmt]
+    qf = q.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(qf), axis=(1, 2)), 1e-12)  # [B]
+    scale = (amax / fmt_obj.max_normal).astype(jnp.float32)
+    codes = encode(qf / scale[:, None, None], fmt_obj, mode)
+    return codes, scale
+
+
+# --------------------------------------------------------------------------- #
+# Phase 1: per-page softmax partials — ONE implementation, called by both
+# the Pallas kernel body and the pure-JAX reference.
+# --------------------------------------------------------------------------- #
+def _page_scores_lns(q_codes, k_codes, qk_scale, fmt, mode):
+    """LNS integer-domain scores for one (slot, page).
+
+    q_codes: [KV, G, hd] uint8; k_codes: [page, KV, hd] uint8;
+    qk_scale: f32 scalar (q_scale * k_page_scale * hd**-0.5).
+    Returns s [KV, G, page] f32.  Every q·k product is the paper's integer
+    add + carry-in; the sum over hd runs on the wide f32 decode.
+    """
+    px = lns_prepare(q_codes, fmt, mode, side="x")        # fields [KV, G, hd]
+    py = lns_prepare(k_codes, fmt, mode, side="y")        # fields [page, KV, hd]
+
+    def ex(f):
+        return None if f is None else f[:, :, None, :]    # [KV, G, 1, hd]
+
+    def ey(f):
+        return None if f is None else jnp.transpose(f, (1, 0, 2))[:, None, :, :]
+
+    pxe = type(px)(*(ex(f) for f in px))
+    pye = type(py)(*(ey(f) for f in py))                  # [KV, 1, page, hd]
+    prod = lns_combine(pxe, pye, fmt)                     # [KV, G, page, hd] f32
+    # Sum over hd as a dot against ones, pinned by a barrier: XLA CPU lowers
+    # dots consistently across the Pallas-interpret and plain-jit contexts,
+    # while reduce-sum vectorization is context dependent (would break the
+    # kernel == ref bit-identity contract).
+    ssum = jax.lax.dot_general(
+        prod, jnp.ones((prod.shape[-1],), jnp.float32),
+        (((3,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    return jax.lax.optimization_barrier(ssum) * qk_scale
+
+
+def _page_partial(
+    q_op, k_page, v_page, k_s, v_s, t0, length, *, fmt, mode, window, cap,
+):
+    """Softmax partials of one (slot, page): (m [KV,G], l [KV,G], o [KV,G,dv]).
+
+    q_op: (codes [KV, G, hd], scale) for LNS pages, or float q [KV, G, hd]
+    for float pages.  k_page/v_page: [page, KV, hd|dv] codes or float.
+    t0: global position of the page's first row; length: valid tokens for
+    this slot.  A fully masked page yields m = -inf -> zero weight in the
+    combine.  ``o`` is the p·V product before the 1/l normalization.
+    """
+    page = k_page.shape[0]
+    if fmt is not None:
+        q_codes, q_scale = q_op
+        hd = q_codes.shape[-1]
+        s = _page_scores_lns(q_codes, k_page, q_scale * k_s * hd**-0.5,
+                             FORMATS[fmt], mode)
+        vf = code_to_f32(v_page, FORMATS[fmt]) * v_s
+    else:
+        hd = q_op.shape[-1]
+        s = jax.lax.dot_general(
+            q_op.astype(jnp.float32), k_page.astype(jnp.float32),
+            (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32,
+        ) * hd**-0.5
+        vf = v_page.astype(jnp.float32)
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+
+    t = t0 + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    ok = t < length
+    if window:
+        ok &= (length - 1 - t) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jax.lax.optimization_barrier(p.sum(axis=-1))
+    # [KV, G, page] x [page, KV, dv] -> [KV, G, dv], batched over KV
+    o = jax.lax.optimization_barrier(jax.lax.dot_general(
+        p, vf, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ))
+    return m, l, o
+
+
+# --------------------------------------------------------------------------- #
+# Phase 2: log-sum-exp combine over pages — shared verbatim by both impls.
+# --------------------------------------------------------------------------- #
+def _combine_partials(m, l, o):
+    """m, l: [B, maxp, KV, G]; o: [B, maxp, KV, G, dv] -> [B, KV*G, dv].
+
+    The entry barrier isolates the combine from its (impl-specific)
+    producers so XLA fuses/compiles it identically for kernel and ref.
+    """
+    m, l, o = jax.lax.optimization_barrier((m, l, o))
+    M = m.max(axis=1)                                    # [B, KV, G]
+    w = jnp.exp(m - M[:, None])                          # [B, maxp, KV, G]
+    l_tot = jax.lax.optimization_barrier((w * l).sum(axis=1))
+    o_tot = jax.lax.optimization_barrier((w[..., None] * o).sum(axis=1))
+    out = o_tot / jnp.maximum(l_tot, 1e-37)[..., None]
+    B, KV, G, dv = out.shape
+    return out.reshape(B, KV * G, dv)
+
+
+# --------------------------------------------------------------------------- #
+# Pure-JAX reference (interpret-mode CI oracle; also the CPU serving path).
+# --------------------------------------------------------------------------- #
+def paged_attention_ref(
+    q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
+    fmt: Optional[str], mode: str, page_size: int, KV: int, G: int,
+    window: int = 0, cap: float = 0.0,
+):
+    """Per-page partials via lax.map (sequential, unbatched shapes — the
+    same shapes one kernel program sees), then the shared combine."""
+    maxp = block_tables.shape[1]
+
+    def slot(args):
+        qb, bt, length = args
+        if fmt is not None:
+            codes, qs = qb
+            q_slot = (codes.reshape(KV, G, -1), qs)
+        else:
+            q_slot = qb.reshape(KV, G, -1)
+
+        def one_page(j):
+            pid = bt[j]
+            return _page_partial(
+                q_slot, k_pages[pid], v_pages[pid], k_scale[pid],
+                v_scale[pid], j * page_size, length,
+                fmt=fmt, mode=mode, window=window, cap=cap,
+            )
+
+        return jax.lax.map(one_page, jnp.arange(maxp))
+
+    m, l, o = jax.lax.map(slot, (q_op, block_tables, lengths))
+    return _combine_partials(m, l, o)
+
+
+# --------------------------------------------------------------------------- #
+# Pallas kernel
+# --------------------------------------------------------------------------- #
+def _paged_kernel(
+    bt_ref, len_ref,                 # scalar prefetch
+    q_ref, qs_ref, kp_ref, ks_ref, vp_ref, vs_ref,  # blocks
+    m_ref, l_ref, o_ref,
+    *, fmt, mode, page, KV, G, window, cap,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    hd = q_ref.shape[-1]
+    q = q_ref[0].reshape(KV, G, hd)
+    q_op = (q, qs_ref[0, 0]) if fmt is not None else q
+    m, l, o = _page_partial(
+        q_op, kp_ref[0], vp_ref[0], ks_ref[0, 0], vs_ref[0, 0],
+        j * page, len_ref[b], fmt=fmt, mode=mode, window=window, cap=cap,
+    )
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    o_ref[0, 0] = o
+
+
+def _paged_kernel_call(
+    q_in, q_scale, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+    *, fmt, mode, page_size, KV, G, window, cap, interpret,
+):
+    B, H, hd = q_in.shape
+    _, page, _, dv = v_pages.shape
+    maxp = block_tables.shape[1]
+    kernel = functools.partial(
+        _paged_kernel, fmt=fmt, mode=mode, page=page_size, KV=KV, G=G,
+        window=window, cap=cap,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, maxp),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (b, 0)),
+            pl.BlockSpec((1, page_size, KV, hd),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (bt[b, j], 0)),
+            pl.BlockSpec((1, page_size, KV, dv),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (bt[b, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, KV, G), lambda b, j, bt, ln: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, KV, G), lambda b, j, bt, ln: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, KV, G, dv),
+                         lambda b, j, bt, ln: (b, j, 0, 0, 0)),
+        ],
+    )
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, maxp, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, maxp, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, maxp, KV, G, dv), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(block_tables, lengths, q_in, q_scale[:, None], k_pages,
+      k_scale[:, None], v_pages, v_scale[:, None])
+    return _combine_partials(m, l, o)
+
+
+# --------------------------------------------------------------------------- #
+# Public entry point
+# --------------------------------------------------------------------------- #
+def paged_decode_attention(
+    q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
+    fmt: Optional[str], n_kv_heads: int, mode: str = "rne",
+    window: int = 0, cap: float = 0.0,
+    impl: str = "auto", interpret: Optional[bool] = None,
+):
+    """Decode attention against a paged KV cache.
+
+    q: [B, 1, H, hd] float; k_pages/v_pages: [P, page, KV, hd|dv] — uint8
+    FP8 codes when ``fmt`` names a format, float otherwise; k_scale/v_scale:
+    [P] f32 per-page scales (ignored for float pages); block_tables:
+    [B, maxp] int32 page ids (unowned entries must point at a reserved page
+    — they are masked by ``lengths``); lengths: [B] int32 valid tokens.
+
+    ``impl``: "kernel" (Pallas), "ref" (pure JAX), "auto" = ref on CPU,
+    kernel on accelerators.  Returns [B, 1, H, dv] in q.dtype.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if impl == "auto":
+        impl = "ref" if jax.default_backend() == "cpu" else "kernel"
+    return _paged_decode_attention(
+        q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+        fmt=fmt, n_kv_heads=n_kv_heads, mode=mode, window=window, cap=cap,
+        impl=impl, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "n_kv_heads", "mode", "window", "cap", "impl",
+                     "interpret"),
+)
+def _paged_decode_attention(
+    q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
+    fmt: Optional[str], n_kv_heads: int, mode: str,
+    window: int, cap: float, impl: str, interpret: bool,
+):
+    B, one, H, hd = q.shape
+    assert one == 1, "paged decode attention is single-position"
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    KV = n_kv_heads
+    G = H // KV
+    q_in = q.reshape(B, H, hd)
+    if fmt is not None:
+        codes, qs = quantize_q(q_in, fmt)
+        q_op = (codes, qs)
+    else:
+        q_op = q_in.astype(jnp.float32)
+
+    if impl == "ref":
+        out = paged_attention_ref(
+            q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+            fmt=fmt, mode=mode, page_size=k_pages.shape[1], KV=KV, G=G,
+            window=window, cap=cap,
+        )
+    elif impl == "kernel":
+        if fmt is not None:
+            q_arr, q_scale = q_op
+        else:
+            q_arr, q_scale = q_op, jnp.ones((B,), jnp.float32)
+        out = _paged_kernel_call(
+            q_arr, q_scale, k_pages, v_pages, k_scale, v_scale,
+            block_tables, lengths, fmt=fmt, mode=mode,
+            page_size=k_pages.shape[1], KV=KV, G=G, window=window, cap=cap,
+            interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.reshape(B, 1, H, -1).astype(q.dtype)

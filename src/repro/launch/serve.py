@@ -1,16 +1,36 @@
 """Serving driver: batched prefill + decode with continuous batching.
 
 A fixed pool of batch slots; finished sequences (EOS or budget) release
-their slot and the next queued request is prefilled into it.  Greedy or
-temperature sampling.  CPU smoke scale:
+their slot and the next queued requests are prefilled into it **in one
+batched prefill call**.  Greedy or temperature sampling.
+
+Two cache backends (``--cache-impl``):
+
+  * ``paged`` (default): the GQA KV cache lives in a global pool of
+    fixed-size FP8 pages (``repro.serving.page_pool``) shared by all slots
+    and all layers — cache memory scales with the page budget, not with
+    slots x max_seq.  Decode attention runs in the paper's LNS integer
+    domain straight off the page codes (``kernels.paged_attention``); KV
+    writes use stochastic-rounding carry-ins.  MLA/SSM/cross caches keep
+    dense per-slot entries.
+  * ``dense``: the original per-slot [slots, max_seq] cache, kept so the
+    paged path's wins stay measurable.
+
+Both backends drive every slot at its own position (a per-slot position
+vector through ``Model.decode_step``), so slots with different history
+lengths coexist in one decode batch.
+
+CPU smoke scale:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 6 --slots 2 --gen 16
+      --requests 6 --slots 2 --gen 16 --quant fp8_w8kv8 --cache-impl paged
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,50 +38,221 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import Model
+from ..serving import PagePool, write_prefill_pages
+
+
+def cache_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
 class Engine:
-    def __init__(self, cfg, *, slots: int, max_seq: int, rng_seed: int = 0):
+    def __init__(self, cfg, *, slots: int, max_seq: int,
+                 cache_impl: str = "paged", page_size: int = 16,
+                 num_pages: Optional[int] = None, rng_seed: int = 0,
+                 stochastic_kv: Optional[bool] = None):
         self.cfg = cfg
         self.model = Model(cfg, max_seq=max_seq)
         self.max_seq = max_seq
         self.slots = slots
+        self.cache_impl = cache_impl
         self.params = self.model.init(jax.random.PRNGKey(rng_seed))
-        self.cache = self.model.make_cache(slots, max_seq)
-        self._decode = jax.jit(self.model.decode_step)
-        # per-slot single-row prefill writes into the shared cache
-        self._prefill1 = jax.jit(self.model.prefill)
-
-    def prefill_slot(self, slot: int, prompt: np.ndarray):
-        """Run a 1-row prefill and splice its cache into the slot."""
-        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
-        if self.cfg.family == "vlm":
-            batch["img"] = jnp.zeros((1, self.cfg.n_img_tokens, self.cfg.d_model), jnp.float32)
-        if self.cfg.family == "encdec":
-            batch["frames"] = jnp.zeros((1, self.cfg.enc_context, self.cfg.d_model), jnp.float32)
-        logits, small = self._prefill1(self.params, batch)
-        plen = prompt.shape[0]
-
-        # splice the 1-row prefill cache into the slot: write new (shorter
-        # prefix) values at [.., slot, :plen_or_full, ..]; structures match.
-        def write(big, new):
-            sl = [slice(None)] * big.ndim
-            # prefix caches: batch first; stacked block caches: [NB, batch, ..]
-            batch_ax = 0 if (new.shape[0] == 1 and big.shape[0] == self.slots) else 1
-            sl[batch_ax] = slice(slot, slot + 1)
-            for ax in range(batch_ax + 1, big.ndim):
-                if new.shape[ax] != big.shape[ax]:
-                    sl[ax] = slice(0, new.shape[ax])
-            return big.at[tuple(sl)].set(new.astype(big.dtype))
-
-        self.cache = jax.tree.map(write, self.cache, small)
-        return int(np.argmax(np.asarray(logits[0, : self.cfg.vocab]))), plen
-
-    def decode(self, tokens: np.ndarray, pos: int):
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32), jnp.int32(pos)
+        self._prefill = jax.jit(self.model.prefill)
+        self._splice_cache: Dict = {}
+        # stochastic-rounding KV writes only matter for FP8 caches
+        if stochastic_kv is None:
+            stochastic_kv = bool(cfg.quant.kv_cache_fp8)
+        self._kv_key = (
+            jax.random.PRNGKey(rng_seed + 17) if stochastic_kv else None
         )
+        self._step = 0
+
+        if cache_impl == "dense":
+            self.pool = None
+            self.cache = self.model.make_cache(slots, max_seq)
+            self._decode = jax.jit(self.model.decode_step)
+        elif cache_impl == "paged":
+            self.page_size = page_size
+            self.max_pages_per_slot = -(-max_seq // page_size)
+            if num_pages is None:
+                num_pages = slots * self.max_pages_per_slot + 1
+            self.pool = PagePool(num_pages, page_size, slots,
+                                 self.max_pages_per_slot)
+            self.cache = self.model.make_paged_cache(
+                slots, num_pages, page_size, max_seq
+            )
+            self._decode_paged = jax.jit(
+                self.model.decode_step_paged, static_argnames=("page_size",)
+            )
+        else:
+            raise ValueError(f"unknown cache_impl {cache_impl!r}")
+
+    # ------------------------------------------------------------------ #
+    def _prefill_batch_inputs(self, prompts: List[np.ndarray]):
+        cfg = self.cfg
+        toks = jnp.asarray(np.stack(prompts), jnp.int32)
+        batch = {"tokens": toks}
+        n = len(prompts)
+        if cfg.family == "vlm":
+            batch["img"] = jnp.zeros(
+                (n, cfg.n_img_tokens, cfg.d_model), jnp.float32
+            )
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (n, cfg.enc_context, cfg.d_model), jnp.float32
+            )
+        return batch
+
+    def _splice_fn(self, n: int, plen_total: int):
+        """Jitted splice of an n-row prefill cache into slots/pages.
+
+        Cached per (n, plen_total) — prompt lengths are bucketed by the
+        caller, so the trace count stays small.
+        """
+        key = (n, plen_total)
+        if key in self._splice_cache:
+            return self._splice_cache[key]
+        cfg = self.cfg
+        paged = self.cache_impl == "paged"
+        fmt = cfg.quant.kv_fmt if cfg.quant.kv_cache_fp8 else None
+        npages = self.pool.pages_needed(plen_total) if paged else 0
+
+        def splice_dense_leaf(big, new, slot_ids, stacked: bool):
+            """Write each prefill row into its slot of a dense cache leaf."""
+            batch_ax = 1 if stacked else 0
+            for i in range(n):
+                row = jax.lax.index_in_dim(new, i, axis=batch_ax, keepdims=True)
+                starts = [jnp.int32(0)] * big.ndim
+                starts[batch_ax] = slot_ids[i]
+                big = jax.lax.dynamic_update_slice(
+                    big, row.astype(big.dtype), tuple(starts)
+                )
+            return big
+
+        def splice_entry(c_e, s_e, slot_ids, page_ids, keys, stacked: bool):
+            out = {}
+            for name, cv in c_e.items():
+                if isinstance(cv, dict) and "kp" in cv:
+                    # paged GQA entry: quantize the prefill rows into pages
+                    mode = "stochastic" if keys is not None else cfg.quant.mode
+
+                    def wr(pages, scales, src, pids, k):
+                        return write_prefill_pages(
+                            pages, scales, src, pids, fmt=fmt, mode=mode,
+                            key=k,
+                        )
+
+                    kp, ks = cv["kp"], cv["ks"]
+                    vp, vs = cv["vp"], cv["vs"]
+                    k_src, v_src = s_e[name]["k"], s_e[name]["v"]
+                    for i in range(n):
+                        ki = None if keys is None else jax.random.fold_in(keys, 2 * i)
+                        vi = None if keys is None else jax.random.fold_in(keys, 2 * i + 1)
+                        if stacked:  # [NB, ...] arrays: vmap the page write
+                            nb = kp.shape[0]
+                            kis = None if ki is None else jax.random.split(ki, nb)
+                            vis = None if vi is None else jax.random.split(vi, nb)
+                            vwr = jax.vmap(wr, in_axes=(0, 0, 0, None, None if ki is None else 0))
+                            kp, ks = vwr(kp, ks, k_src[:, i], page_ids[i], kis)
+                            vp, vs = vwr(vp, vs, v_src[:, i], page_ids[i], vis)
+                        else:
+                            kp, ks = wr(kp, ks, k_src[i], page_ids[i], ki)
+                            vp, vs = wr(vp, vs, v_src[i], page_ids[i], vi)
+                    out[name] = {"kp": kp, "vp": vp, "ks": ks, "vs": vs}
+                elif isinstance(cv, dict):
+                    out[name] = {
+                        k: splice_dense_leaf(cv[k], s_e[name][k], slot_ids, stacked)
+                        for k in cv
+                    }
+                else:
+                    out[name] = splice_dense_leaf(cv, s_e[name], slot_ids, stacked)
+            return out
+
+        def splice(cache, small, slot_ids, page_ids, keys):
+            new_prefix = tuple(
+                splice_entry(c, s, slot_ids, page_ids, keys, stacked=False)
+                for c, s in zip(cache["prefix"], small["prefix"])
+            )
+            new_blocks = tuple(
+                splice_entry(c, s, slot_ids, page_ids, keys, stacked=True)
+                for c, s in zip(cache["blocks"], small["blocks"])
+            )
+            return {"prefix": new_prefix, "blocks": new_blocks}
+
+        jitted = jax.jit(splice)
+        self._splice_cache[key] = (jitted, npages)
+        return self._splice_cache[key]
+
+    def prefill_batch(self, prompts: List[np.ndarray], slots: List[int]):
+        """Batched prefill admission: one model call for all new requests,
+        then splice each row's cache into its slot (pages or dense rows).
+        Returns (first_tokens [n], plen_total)."""
+        cfg = self.cfg
+        n = len(prompts)
+        plen = prompts[0].shape[0]
+        assert all(p.shape[0] == plen for p in prompts), "bucket by length"
+        img_off = cfg.n_img_tokens if cfg.family == "vlm" else 0
+        plen_total = plen + img_off
+        logits, small = self._prefill(
+            self.params, self._prefill_batch_inputs(prompts)
+        )
+        splice, npages = self._splice_fn(n, plen_total)
+        if self.cache_impl == "paged":
+            page_ids = np.zeros((n, npages), np.int32)
+            for i, slot in enumerate(slots):
+                page_ids[i] = self.pool.alloc(slot, npages)
+        else:
+            page_ids = np.zeros((n, 1), np.int32)
+        keys = None
+        if self._kv_key is not None:
+            keys = jax.random.fold_in(self._kv_key, 1_000_003 + self._step)
+        self.cache = splice(
+            self.cache, small, jnp.asarray(np.asarray(slots, np.int32)),
+            jnp.asarray(page_ids), keys,
+        )
+        first = np.argmax(np.asarray(logits[:, : cfg.vocab]), axis=-1)
+        return first, plen_total
+
+    # ------------------------------------------------------------------ #
+    def decode(self, tokens: np.ndarray, pos: np.ndarray):
+        """Dense decode step; ``pos`` is the per-slot position vector."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32),
+        )
+        self._step += 1
         return np.asarray(logits[:, : self.cfg.vocab])
+
+    def decode_paged(self, tokens: np.ndarray, lengths: np.ndarray):
+        """Paged decode step; allocates fresh pages for slots crossing a
+        page boundary, then runs the paged decode."""
+        for slot in range(self.slots):
+            if lengths[slot] > 0:
+                self.pool.ensure_capacity(slot, int(lengths[slot]) + 1)
+        key = None
+        if self._kv_key is not None:
+            key = jax.random.fold_in(self._kv_key, self._step)
+        logits, self.cache = self._decode_paged(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(self.pool.block_tables),
+            page_size=self.page_size, key=key,
+        )
+        self._step += 1
+        return np.asarray(logits[:, : self.cfg.vocab])
+
+    def release(self, slot: int):
+        if self.pool is not None:
+            self.pool.free_slot(slot)
+
+    # ------------------------------------------------------------------ #
+    def kv_cache_bytes(self) -> int:
+        return cache_bytes(self.cache)
+
+    def kv_capacity_tokens(self) -> int:
+        """Token capacity the cache memory buys (pool pages or dense rows)."""
+        if self.pool is not None:
+            return (self.pool.num_pages - 1) * self.page_size
+        return self.slots * self.max_seq
 
 
 def sample(logits: np.ndarray, temperature: float, rng: np.random.Generator):
@@ -74,11 +265,115 @@ def sample(logits: np.ndarray, temperature: float, rng: np.random.Generator):
     return np.array([rng.choice(len(row), p=row) for row in p])
 
 
+def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
+        temperature: float = 0.0, seed: int = 0, quiet: bool = False):
+    """Continuous-batching loop over ``queue``.  Returns (outputs, stats)."""
+    rng = np.random.default_rng(seed)
+    requests = len(queue)
+    img_off = eng.cfg.n_img_tokens if eng.cfg.family == "vlm" else 0
+    active: Dict[int, dict] = {}
+    reserved: Dict[int, int] = {}  # slot -> worst-case page reservation
+    outputs: Dict[int, list] = {}
+    next_req = 0
+    t0 = time.time()
+    steps = 0
+    decoded_tokens = 0
+
+    while len(outputs) < requests:
+        # ---- batched admission into every free slot ------------------- #
+        # Admission control reserves each request's worst-case page count
+        # (prompt + full generation budget) so decode can never exhaust the
+        # pool mid-flight; pages themselves are still allocated lazily.
+        admit_slots, admit_prompts = [], []
+        for slot in range(eng.slots):
+            if slot in active or next_req >= requests:
+                continue
+            if eng.pool is not None:
+                worst = eng.pool.pages_needed(
+                    queue[next_req].shape[0] + img_off + gen
+                )
+                if sum(reserved.values()) + worst > eng.pool.num_pages - 1:
+                    if not active and not admit_slots:
+                        # nothing in flight will ever free pages: this
+                        # request can never fit -> fail instead of spinning
+                        raise RuntimeError(
+                            f"request {next_req} needs {worst} pages but the "
+                            f"pool has only {eng.pool.num_pages - 1}; raise "
+                            "--pages or lower --gen/--prompt-len"
+                        )
+                    break  # wait for in-flight requests to free pages
+                reserved[slot] = worst
+            admit_slots.append(slot)
+            admit_prompts.append(queue[next_req])
+            next_req += 1
+        if admit_prompts:
+            base_rid = next_req - len(admit_slots)
+            # bucket by prompt length: each bucket is one batched prefill
+            by_len: Dict[int, List[int]] = {}
+            for i, p in enumerate(admit_prompts):
+                by_len.setdefault(p.shape[0], []).append(i)
+            for idxs in by_len.values():
+                first, plen_total = eng.prefill_batch(
+                    [admit_prompts[i] for i in idxs],
+                    [admit_slots[i] for i in idxs],
+                )
+                for j, i in enumerate(idxs):
+                    active[admit_slots[i]] = dict(
+                        rid=base_rid + i, pos=plen_total,
+                        out=[int(first[j])], last=int(first[j]),
+                    )
+
+        # ---- one decode step for the whole pool ----------------------- #
+        toks = np.zeros((eng.slots,), np.int32)
+        pos = np.zeros((eng.slots,), np.int32)
+        for slot, st in active.items():
+            toks[slot] = st["last"]
+            pos[slot] = st["pos"]
+        if eng.cache_impl == "paged":
+            logits = eng.decode_paged(toks, pos)
+        else:
+            logits = eng.decode(toks, pos)
+        steps += 1
+        decoded_tokens += len(active)
+        nxt = sample(logits, temperature, rng)
+        done = []
+        for slot, st in list(active.items()):
+            st["last"] = int(nxt[slot])
+            st["out"].append(st["last"])
+            st["pos"] += 1
+            if len(st["out"]) >= gen:
+                outputs[st["rid"]] = st["out"]
+                done.append(slot)
+        for slot in done:
+            del active[slot]
+            reserved.pop(slot, None)
+            eng.release(slot)
+
+    dt = time.time() - t0
+    stats = dict(
+        steps=steps, wall_s=dt,
+        tok_s=decoded_tokens / dt if dt > 0 else 0.0,
+        cache_bytes=eng.kv_cache_bytes(),
+        cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
+    )
+    if not quiet:
+        print(f"[serve:{eng.cache_impl}] {requests} requests, {steps} decode "
+              f"steps, {stats['tok_s']:.1f} tok/s, cache "
+              f"{stats['cache_bytes'] / 1e6:.2f} MB "
+              f"({stats['cache_bytes_per_token']:.0f} B/token capacity)")
+    return outputs, stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quant", default="none")
+    ap.add_argument("--cache-impl", default="paged",
+                    choices=["paged", "dense"])
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size (0 = worst-case slots*max_seq)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=8)
@@ -89,47 +384,16 @@ def main(argv=None):
 
     cfg = get_config(args.arch, smoke=args.smoke, quant=args.quant)
     max_seq = args.prompt_len + args.gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
-    eng = Engine(cfg, slots=args.slots, max_seq=max_seq, rng_seed=args.seed)
+    eng = Engine(
+        cfg, slots=args.slots, max_seq=max_seq,
+        cache_impl=args.cache_impl, page_size=args.page_size,
+        num_pages=args.pages or None, rng_seed=args.seed,
+    )
     rng = np.random.default_rng(args.seed)
-
-    queue = [rng.integers(0, cfg.vocab, size=args.prompt_len) for _ in range(args.requests)]
-    img_off = cfg.n_img_tokens if cfg.family == "vlm" else 0
-    active = {}  # slot -> dict(request_id, pos, tokens, last)
-    outputs = {}
-    next_req = 0
-    t0 = time.time()
-    steps = 0
-
-    while len(outputs) < args.requests:
-        # admit
-        for slot in range(args.slots):
-            if slot not in active and next_req < args.requests:
-                first, plen = eng.prefill_slot(slot, queue[next_req])
-                active[slot] = dict(rid=next_req, pos=img_off + plen,
-                                    out=[first], last=first)
-                next_req += 1
-        # one decode step for the whole pool
-        toks = np.zeros((args.slots,), np.int32)
-        for slot, st in active.items():
-            toks[slot] = st["last"]
-        pos = max(st["pos"] for st in active.values())
-        logits = eng.decode(toks, pos)
-        steps += 1
-        nxt = sample(logits, args.temperature, rng)
-        done = []
-        for slot, st in list(active.items()):
-            st["last"] = int(nxt[slot])
-            st["out"].append(st["last"])
-            st["pos"] += 1
-            if len(st["out"]) >= args.gen:
-                outputs[st["rid"]] = st["out"]
-                done.append(slot)
-        for slot in done:
-            del active[slot]
-
-    dt = time.time() - t0
-    print(f"[serve] {args.requests} requests, {steps} decode steps, "
-          f"{steps * args.slots / dt:.1f} tok/s (pool)")
+    queue = [rng.integers(0, cfg.vocab, size=args.prompt_len)
+             for _ in range(args.requests)]
+    outputs, _ = run(eng, queue, gen=args.gen,
+                     temperature=args.temperature, seed=args.seed)
     for rid in sorted(outputs):
         print(f"  req{rid}: {outputs[rid][:10]}...")
     return outputs

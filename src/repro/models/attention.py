@@ -103,10 +103,12 @@ def gqa_forward(p, x, cfg, *, is_global: bool, positions, cross_kv=None,
 
 def gqa_decode(p, x, cfg, *, is_global: bool, cache, pos, cross_kv=None,
                use_rope=True):
-    """x: [B, 1, D]; cache k/v: [B, S, KV, hd]; pos: scalar position index."""
+    """x: [B, 1, D]; cache k/v: [B, S, KV, hd]; pos: position index — a
+    scalar, or a [B] vector of per-slot positions (serving batches)."""
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
     q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope)
     if cross_kv is not None:
         k, v = cross_kv
@@ -119,14 +121,59 @@ def gqa_decode(p, x, cfg, *, is_global: bool, cache, pos, cross_kv=None,
         window = 0 if is_global else cfg.window
         ring = bool(window) and W <= window  # ring buffer cache
         write = jax.lax.rem(pos, W) if ring else pos
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_c, write, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_c, write, axis=1)
+        b_ix = jnp.arange(B)
+        k = cache["k"].at[b_ix, write].set(k_c[:, 0])
+        v = cache["v"].at[b_ix, write].set(v_c[:, 0])
         out = decode_attention(q, _kv_load(k, cfg), _kv_load(v, cfg),
                                pos=pos, window=0 if ring else window,
                                cap=cfg.attn_softcap, ring=ring)
         new_cache = {"k": k, "v": v}
     y = qlinear(out.reshape(B, 1, -1), p["wo"], cfg.quant)
     return y, new_cache
+
+
+def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
+                     use_rope=True):
+    """GQA decode against the global page pool (serving path).
+
+    x: [B, 1, D]; cache: this layer's page arrays {"kp", "vp", "ks", "vs"}
+    (kp/vp: [P, page, KV, hd], ks/vs: [P] f32); paged: the step's shared
+    state {"block_tables" [B, maxp], "lengths" [B] (context length per slot
+    BEFORE this token), "page_size", "key" (stochastic-write PRNG key or
+    None)}.  Writes the new token's K/V into its page (fresh pages get a
+    pow2 scale from the token's absmax), then runs the integer-domain paged
+    decode attention.  Returns (y, new_cache).
+    """
+    from ..kernels.paged_attention import paged_decode_attention
+    from ..serving.page_pool import write_token_page
+
+    B = x.shape[0]
+    KV = cfg.n_kv_heads
+    lengths = jnp.asarray(paged["lengths"], jnp.int32)
+    block_tables = jnp.asarray(paged["block_tables"], jnp.int32)
+    page_size = paged["page_size"]
+    positions = lengths[:, None]
+    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope)
+
+    fmt = cfg.quant.kv_fmt if cfg.quant.kv_cache_fp8 else None
+    logical = lengths // page_size
+    page_ids = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    rows = lengths - logical * page_size
+    key = paged.get("key")
+    kk, vk = (None, None) if key is None else tuple(jax.random.split(key))
+    mode = "stochastic" if key is not None else cfg.quant.mode
+    kp, ks = write_token_page(cache["kp"], cache["ks"], k_new[:, 0], page_ids,
+                              rows, fmt=fmt, mode=mode, key=kk)
+    vp, vs = write_token_page(cache["vp"], cache["vs"], v_new[:, 0], page_ids,
+                              rows, fmt=fmt, mode=mode, key=vk)
+    window = 0 if is_global else cfg.window
+    out = paged_decode_attention(
+        q, kp, vp, ks, vs, block_tables, lengths + 1,
+        fmt=fmt, n_kv_heads=KV, mode=cfg.quant.mode,
+        window=window, cap=cfg.attn_softcap,
+    )
+    y = qlinear(out.reshape(B, 1, -1), p["wo"], cfg.quant)
+    return y, {"kp": kp, "vp": vp, "ks": ks, "vs": vs}
 
 
 # --------------------------------------------------------------------------- #
@@ -183,11 +230,14 @@ def mla_forward(p, x, cfg, *, positions, q_chunk=512, kv_chunk=1024, **_):
 
 
 def mla_decode(p, x, cfg, *, cache, pos, **_):
-    """Absorbed-matrices decode: attention directly in the latent space."""
+    """Absorbed-matrices decode: attention directly in the latent space.
+
+    ``pos`` is a scalar or a [B] vector of per-slot positions."""
     B = x.shape[0]
     H = cfg.n_heads
     dn, dr, dv, L = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
     q_nope, q_pe = _mla_q(p, x, cfg, positions)  # [B,1,H,dn],[B,1,H,dr]
     ckv_new, kpe_new = _mla_latent(p, x, cfg, positions)
     if cfg.quant.kv_cache_fp8:
@@ -195,8 +245,9 @@ def mla_decode(p, x, cfg, *, cache, pos, **_):
     else:
         ckv_new = ckv_new.astype(cache["ckv"].dtype)
         kpe_new = kpe_new.astype(cache["kpe"].dtype)
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
-    kpe = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe_new, pos, axis=1)
+    b_ix = jnp.arange(B)
+    ckv = cache["ckv"].at[b_ix, pos].set(ckv_new[:, 0])
+    kpe = cache["kpe"].at[b_ix, pos].set(kpe_new[:, 0])
     cache = {"ckv": ckv, "kpe": kpe}
     ckv, kpe = _kv_load(ckv, cfg), _kv_load(kpe, cfg)
     S = ckv.shape[1]
@@ -212,7 +263,7 @@ def mla_decode(p, x, cfg, *, cache, pos, **_):
                        kpe.astype(jnp.float32))
     s = s * (dn + dr) ** -0.5
     t = jnp.arange(S)
-    s = jnp.where((t <= pos)[None, None, :], s, -2.0e30)
+    s = jnp.where((t[None, :] <= pos[:, None])[:, None, :], s, -2.0e30)
     m = s.max(-1, keepdims=True)
     pattn = jnp.exp(s - m)
     den = pattn.sum(-1, keepdims=True)

@@ -312,26 +312,28 @@ def decode_attention(q, k, v, *, pos, window=0, cap=0.0, ring=False):
     """Single-position attention against a full-length cache.
 
     q: [B, 1, H, hd]; k/v: [B, S, KV, hd]; ``pos``: current position (the
-    number of valid cache entries).  Two-pass stable softmax keeps the
-    reduction explicit so a sequence-sharded cache (SP/flash-decoding) turns
-    the max/sum into cheap collectives under pjit.
+    number of valid cache entries) — a scalar, or a [B] vector when slots
+    in a serving batch sit at different positions.  Two-pass stable softmax
+    keeps the reduction explicit so a sequence-sharded cache
+    (SP/flash-decoding) turns the max/sum into cheap collectives under pjit.
     """
     B, _, H, hd = q.shape
     _, S, KV, _ = k.shape
     dv = v.shape[-1]
     G = H // KV
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * hd**-0.5
     s = softcap(s, cap)
     t = jnp.arange(S)
     if ring:
         # ring cache of length S: all slots valid once pos >= S - 1
-        ok = (t[None, :] <= pos) | (pos >= S)
+        ok = (t[None, :] <= pos[:, None]) | (pos[:, None] >= S)
     else:
-        ok = t[None, :] <= pos
+        ok = t[None, :] <= pos[:, None]
         if window:
-            ok &= (pos - t[None, :]) < window
-    s = jnp.where(ok[:, None, None, :].reshape(1, 1, 1, S), s, NEG_INF)
+            ok &= (pos[:, None] - t[None, :]) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
     m = s.max(-1, keepdims=True)
     p = jnp.exp(s - m)
     num = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))

@@ -177,11 +177,15 @@ class Model:
         return logits, {"prefix": pc, "blocks": caches}
 
     def decode_step(self, params, cache, tokens, pos):
-        """tokens: [B] int32; pos: scalar int32 write index."""
+        """tokens: [B] int32; pos: scalar int32 write index, or a [B]
+        vector of per-slot positions (serving batches where slots sit at
+        different context lengths)."""
         cfg = self.cfg
+        B = tokens.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
         x = self._embed(params, tokens[:, None])
         if cfg.family == "encdec":
-            x = x + jnp.take(params["dec_pos"], jnp.full((1,), pos), axis=0)[None]
+            x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None]
         aux = dict(AUX0)
         new_prefix = []
         for p, s, c in zip(
@@ -191,6 +195,49 @@ class Model:
             new_prefix.append(nc)
         x, new_caches, _ = stack_decode(
             params["blocks"], cache["blocks"], x, cfg, self.pattern, pos=pos
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._unembed(params, x[:, 0])
+        return logits, {"prefix": tuple(new_prefix), "blocks": new_caches}
+
+    def decode_step_paged(self, params, cache, tokens, lengths, block_tables,
+                          *, page_size: int, key=None):
+        """One decode step against the paged cache (serving path).
+
+        tokens: [B] int32; lengths: [B] int32 per-slot context lengths
+        (BEFORE this token); block_tables: [B, maxp] int32 page ids;
+        ``key``: PRNG key for stochastic-rounding KV writes (None =>
+        deterministic writes in cfg.quant.mode).  GQA layers read/write the
+        page pool; MLA/SSM/cross entries keep their dense slot caches,
+        indexed by per-slot positions.  Returns (logits, new_cache).
+        """
+        cfg = self.cfg
+        B = tokens.shape[0]
+        lengths = jnp.asarray(lengths, jnp.int32)
+        paged = {
+            "block_tables": jnp.asarray(block_tables, jnp.int32),
+            "lengths": lengths,
+            "page_size": page_size,
+            "key": key,
+        }
+        x = self._embed(params, tokens[:, None])
+        if cfg.family == "encdec":
+            x = x + jnp.take(params["dec_pos"], lengths, axis=0)[:, None]
+        aux = dict(AUX0)
+        new_prefix = []
+        for i, (p, s, c) in enumerate(zip(
+            params.get("prefix", ()), self.prefix_specs, cache.get("prefix", ())
+        )):
+            pkey = None if key is None else jax.random.fold_in(key, 1 + i)
+            x, nc, aux = sublayer_decode(
+                p, s, x, cfg, cache=c, pos=lengths, aux=aux,
+                paged=dict(paged, key=pkey),
+            )
+            new_prefix.append(nc)
+        bkey = None if key is None else jax.random.fold_in(key, 0)
+        x, new_caches, _ = stack_decode(
+            params["blocks"], cache["blocks"], x, cfg, self.pattern,
+            pos=lengths, paged=dict(paged, key=bkey),
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._unembed(params, x[:, 0])
@@ -236,6 +283,43 @@ class Model:
         one_block = tuple(self._entry_cache(s, B, S) for s in self.pattern)
         blocks = jax.tree.map(
             lambda a: jnp.zeros((self.n_blocks,) + a.shape, a.dtype), one_block
+        )
+        return {"prefix": prefix, "blocks": blocks}
+
+    def _entry_cache_paged(self, spec: SubSpec, B: int, S: int,
+                           num_pages: int, page_size: int):
+        """Per-layer paged entry: GQA KV lives in the global page pool;
+        MLA/SSM/cross entries keep their dense per-slot representation."""
+        cfg = self.cfg
+        e = self._entry_cache(spec, B, S)
+        if spec.mixer == "attn" and cfg.attn_impl != "mla":
+            dt = jnp.uint8 if cfg.quant.kv_cache_fp8 else cfg.pdtype
+            pshape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+            e["self"] = {
+                "kp": jnp.zeros(pshape, dt),
+                "vp": jnp.zeros(pshape, dt),
+                "ks": jnp.ones((num_pages,), jnp.float32),
+                "vs": jnp.ones((num_pages,), jnp.float32),
+            }
+        return e
+
+    def make_paged_cache(self, B: int, num_pages: int, page_size: int,
+                         S: int = 0):
+        """Decode cache backed by a ``num_pages``-page pool (page 0 is the
+        reserved null page).  Cache memory for GQA layers scales with the
+        pool size, not with slots * max_seq; ``S`` only sizes the dense
+        fallback entries (MLA latent caches, SSM states, cross KV)."""
+        S = S or self.max_seq
+        prefix = tuple(
+            self._entry_cache_paged(s, B, S, num_pages, page_size)
+            for s in self.prefix_specs
+        )
+        one_block = tuple(
+            self._entry_cache_paged(s, B, S, num_pages, page_size)
+            for s in self.pattern
+        )
+        blocks = jax.tree.map(
+            lambda a: jnp.repeat(a[None], self.n_blocks, axis=0), one_block
         )
         return {"prefix": prefix, "blocks": blocks}
 

@@ -20,7 +20,15 @@ import jax
 import jax.numpy as jnp
 
 from ..parallel.hints import hint
-from .attention import gqa_decode, gqa_forward, gqa_init, mla_decode, mla_forward, mla_init
+from .attention import (
+    gqa_decode,
+    gqa_decode_paged,
+    gqa_forward,
+    gqa_init,
+    mla_decode,
+    mla_forward,
+    mla_init,
+)
 from .layers import gated_mlp, qlinear, rms_norm
 from .mamba2 import mamba2_init, ssd_decode, ssd_forward
 from .moe import moe_ffn, moe_init
@@ -152,13 +160,25 @@ def sublayer_forward(p, spec: SubSpec, x, cfg, *, positions, mode,
     return x, cache, aux
 
 
-def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None):
-    """Single-token sublayer.  Returns (x, new_cache, aux)."""
+def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None,
+                    paged=None):
+    """Single-token sublayer.  Returns (x, new_cache, aux).
+
+    ``pos`` is a scalar or per-slot [B] vector.  ``paged`` is the serving
+    step's shared paged-cache state (block tables, lengths, page size, PRNG
+    key) — attention sublayers whose cache entry is paged (has "kp") route
+    through the page pool; everything else uses the dense slot cache.
+    """
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     new_cache: Dict[str, Any] = {}
     if spec.mixer == "attn":
         if cfg.attn_impl == "mla":
             out, c = mla_decode(p["attn"], h, cfg, cache=cache["self"], pos=pos)
+        elif paged is not None and "kp" in cache["self"]:
+            out, c = gqa_decode_paged(
+                p["attn"], h, cfg, is_global=spec.attn_global,
+                cache=cache["self"], paged=paged, use_rope=_use_rope(cfg),
+            )
         else:
             out, c = gqa_decode(
                 p["attn"], h, cfg, is_global=spec.attn_global,
@@ -240,16 +260,35 @@ def stack_forward(blocks, x, cfg, pattern, *, positions, mode,
     return x, caches, aux
 
 
-def stack_decode(blocks, caches, x, cfg, pattern, *, pos):
+def stack_decode(blocks, caches, x, cfg, pattern, *, pos, paged=None):
+    key = None if paged is None else paged.get("key")
+    n_blocks = jax.tree_util.tree_leaves(caches)[0].shape[0]
+    # per-block stochastic-write keys ride the scan as an xs array (a dummy
+    # when stochastic rounding is off, to keep the scan structure static)
+    keys = (
+        jax.random.split(key, n_blocks)
+        if key is not None
+        else jnp.zeros((n_blocks, 2), jnp.uint32)
+    )
+
     def block_fn(carry, scanned):
         x, aux = carry
         x = hint(x, "act")
-        bp, bc = scanned
+        bp, bc, bkey = scanned
         new_cs = []
         for j, spec in enumerate(pattern):
-            x, c, aux = sublayer_decode(bp[j], spec, x, cfg, cache=bc[j], pos=pos, aux=aux)
+            bpaged = None
+            if paged is not None:
+                bkj = jax.random.fold_in(bkey, j) if key is not None else None
+                bpaged = dict(paged, key=bkj)
+            x, c, aux = sublayer_decode(
+                bp[j], spec, x, cfg, cache=bc[j], pos=pos, aux=aux,
+                paged=bpaged,
+            )
             new_cs.append(c)
         return (x, aux), tuple(new_cs)
 
-    (x, aux), new_caches = jax.lax.scan(block_fn, (x, dict(AUX0)), (blocks, caches))
+    (x, aux), new_caches = jax.lax.scan(
+        block_fn, (x, dict(AUX0)), (blocks, caches, keys)
+    )
     return x, new_caches, aux

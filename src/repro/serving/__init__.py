@@ -1,0 +1,23 @@
+"""Serving subsystem: paged FP8 KV cache + integer-domain decode attention.
+
+``page_pool`` owns the global page pool (host allocator + device write
+helpers); ``kernels.paged_attention`` consumes the paged layout; the
+``Engine`` in ``launch.serve`` drives admission, decode and eviction on top.
+"""
+from .page_pool import (
+    PagePool,
+    encode_kv,
+    pow2_page_scale,
+    rescale_codes,
+    write_prefill_pages,
+    write_token_page,
+)
+
+__all__ = [
+    "PagePool",
+    "encode_kv",
+    "pow2_page_scale",
+    "rescale_codes",
+    "write_prefill_pages",
+    "write_token_page",
+]

@@ -1,0 +1,243 @@
+"""Paged KV-cache manager: a global pool of fixed-size FP8 pages.
+
+Layout (per attention layer, stacked over blocks like the dense cache):
+
+  k_pages / v_pages : [num_pages, page_size, KV, hd]   uint8 FP8 codes
+                      (or the model's param dtype for unquantized caches)
+  k_scale / v_scale : [num_pages]                      f32 per-page scales
+
+``PagePool`` is the host-side allocator: it owns the free list and the
+per-slot block tables (page ids in logical order).  Page 0 is reserved as
+the null page — unowned block-table entries point at it so the attention
+kernel's gather always hits a valid index, and inactive slots harmlessly
+scribble into it.  All layers share one allocation (the same block table
+indexes every layer's page arrays), exactly the vLLM layout.
+
+Per-page scales are **powers of two** chosen from the page's first write
+(absmax mapped onto the format's max_normal).  A power-of-two scale means
+applying it to FP8 codes is an exponent-field add — exact in the paper's
+LNS view — so splicing scale-1 prefill codes into a scaled page is an LNS
+multiply by the (exactly representable) scale ratio.  That multiply, and
+every f32 -> code KV write, uses the paper's **stochastic-rounding
+carry-ins** (``core.carry_ins.stochastic_carry_in``: a uniform bit selects
+between the Table-2 RD and RU expressions), so rounding bias cannot
+accumulate over thousands of decode steps.
+
+Device-side helpers here are pure jnp and jit/Pallas-safe; the allocator is
+plain numpy/python (it runs on the host between decode steps).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.carry_ins import supports_stochastic
+from ..core.formats import FORMATS
+from ..core.lns import lns_op
+from ..core.quant import encode
+from ..kernels.common import code_to_f32
+
+__all__ = [
+    "PagePool",
+    "pow2_page_scale",
+    "encode_kv",
+    "rescale_codes",
+    "write_token_page",
+    "write_prefill_pages",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Host-side allocator
+# --------------------------------------------------------------------------- #
+class PagePool:
+    """Free-list page allocator + per-slot block tables (host side).
+
+    The pool size is independent of the slot count — cache memory is
+    ``num_pages * page_size`` tokens, however many slots share it.
+    Admission control is the caller's job via :meth:`can_alloc`.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 max_pages_per_slot: int):
+        assert num_pages >= 2, "need at least the null page + one real page"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.slots = slots
+        self.max_pages_per_slot = max_pages_per_slot
+        # page 0 is the reserved null page; hand out high ids first so tests
+        # catch any code path that assumes page ids are contiguous from 1.
+        self._free: List[int] = list(range(1, num_pages))
+        self.block_tables = np.zeros((slots, max_pages_per_slot), np.int32)
+        self.pages_of = [[] for _ in range(slots)]
+
+    # ------------------------------------------------------------------ #
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, slot: int, n: int = 1) -> List[int]:
+        """Allocate ``n`` pages to ``slot`` (appended in logical order)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)}"
+            )
+        owned = self.pages_of[slot]
+        if len(owned) + n > self.max_pages_per_slot:
+            raise RuntimeError(
+                f"slot {slot} exceeds max_pages_per_slot="
+                f"{self.max_pages_per_slot}"
+            )
+        ids = [self._free.pop() for _ in range(n)]
+        start = len(owned)
+        owned.extend(ids)
+        self.block_tables[slot, start:start + len(ids)] = ids
+        return ids
+
+    def free_slot(self, slot: int) -> None:
+        """Return every page of ``slot`` to the free list."""
+        self._free.extend(self.pages_of[slot])
+        self.pages_of[slot] = []
+        self.block_tables[slot] = 0
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> None:
+        """Allocate pages so ``slot`` can hold ``n_tokens`` tokens."""
+        need = self.pages_needed(n_tokens) - len(self.pages_of[slot])
+        if need > 0:
+            self.alloc(slot, need)
+
+
+# --------------------------------------------------------------------------- #
+# Device-side helpers (pure jnp)
+# --------------------------------------------------------------------------- #
+def pow2_page_scale(amax, fmt):
+    """Power-of-two scale mapping ``amax`` just inside the format's range.
+
+    Pure integer bit manipulation (jnp.exp2/log2 are polynomial
+    approximations under jit and would produce not-quite-pow2 scales):
+    ``scale = 2^(ceil(log2(amax)) - e_max)`` so ``amax / scale <= 2^e_max
+    <= max_normal``.  Clamped so both the scale and its reciprocal are
+    normal FP8 values — the reciprocal is the LNS rescale operand for code
+    splices.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    a = jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-12)
+    bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    e_amax = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    e_amax = e_amax + ((bits & 0x7FFFFF) != 0).astype(jnp.int32)  # ceil
+    e = jnp.clip(e_amax - fmt.e_max, -(fmt.bias - 1), fmt.bias - 1)
+    return jax.lax.bitcast_convert_type(
+        ((e + 127).astype(jnp.uint32)) << 23, jnp.float32
+    )
+
+
+def _rbits(key, shape):
+    return jax.random.randint(key, shape, 0, 2, dtype=jnp.int32)
+
+
+def encode_kv(x, scale, fmt: str, mode: str = "stochastic", key=None):
+    """float K/V -> FP8 codes at ``scale`` (value ~= decode(code) * scale).
+
+    ``mode="stochastic"`` uses the f32 encoder's stochastic rounding (needs
+    ``key``); any Table-2/3 mode string falls through to the deterministic
+    encoder.
+    """
+    xs = jnp.asarray(x, jnp.float32) / scale
+    if mode == "stochastic":
+        if key is None:
+            raise ValueError("stochastic KV encode needs a PRNG key")
+        return encode(xs, fmt, "stochastic", key=key)
+    return encode(xs, fmt, mode)
+
+
+def rescale_codes(codes, inv_scale, fmt: str, mode: str = "stochastic",
+                  key=None):
+    """Rescale FP8 codes by ``inv_scale`` entirely in the code domain.
+
+    ``code' = lns_mul(code, encode(inv_scale))`` — the paper's integer-add
+    multiply.  For power-of-two ratios (the page-scale contract) the
+    mantissa of the ratio code is zero, every Table-2 carry-in evaluates to
+    0, and the rescale is exact; for general ratios ``mode="stochastic"``
+    selects per element between the RD and RU carry-ins
+    (``carry_ins.stochastic_carry_in``) so the rescale is unbiased.
+    """
+    ratio = encode(jnp.asarray(inv_scale, jnp.float32), fmt, "rne")
+    ratio = jnp.broadcast_to(ratio, codes.shape)
+    if mode == "stochastic" and supports_stochastic(fmt, "mul"):
+        if key is None:
+            raise ValueError("stochastic rescale needs a PRNG key")
+        return lns_op(fmt, "mul", "stochastic", codes, ratio,
+                      rbits=_rbits(key, codes.shape))
+    if mode == "stochastic":  # format without RD/RU mul expressions (e4m3)
+        mode = "rne"
+    return lns_op(fmt, "mul", mode, codes, ratio)
+
+
+def write_token_page(pages, scales, new, page_ids, rows, *,
+                     fmt: Optional[str], mode: str = "stochastic", key=None):
+    """Scatter one decode token's K or V into its page, per slot.
+
+    pages: [P, page, KV, hd]; scales: [P] f32; new: [B, KV, hd] float;
+    page_ids/rows: [B] int32 (physical page and row of each slot's write).
+    A write to row 0 claims the page and sets its scale from the token's
+    absmax; later rows reuse the page's existing scale.  Returns
+    (pages, scales).
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+    if fmt is None:
+        pages = pages.at[page_ids, rows].set(new.astype(pages.dtype))
+        return pages, scales
+    amax = jnp.max(jnp.abs(jnp.asarray(new, jnp.float32)), axis=(1, 2))
+    fresh = rows == 0
+    s = jnp.where(fresh, pow2_page_scale(amax, fmt), scales[page_ids])
+    codes = encode_kv(new, s[:, None, None], fmt, mode, key)
+    pages = pages.at[page_ids, rows].set(codes)
+    scales = scales.at[page_ids].set(s)
+    return pages, scales
+
+
+def write_prefill_pages(pages, scales, src, page_ids, *,
+                        fmt: Optional[str], mode: str = "stochastic",
+                        key=None):
+    """Splice a prefill cache row into freshly allocated pages.
+
+    pages: [P, page, KV, hd]; scales: [P]; src: [S, KV, hd] — scale-1 FP8
+    codes (the dense prefill cache representation) or float; page_ids:
+    [n_pages] int32 with n_pages * page_size >= S.  Per-page scales come
+    from the page content's absmax; the code -> code rescale is the LNS
+    multiply with stochastic carry-ins (exact here because page scales are
+    powers of two).  Returns (pages, scales).
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    n_pages = page_ids.shape[0]
+    page = pages.shape[1]
+    S = src.shape[0]
+    pad = n_pages * page - S
+    srcp = jnp.pad(src, ((0, pad), (0, 0), (0, 0))) if pad else src
+    srcp = srcp.reshape(n_pages, page, *src.shape[1:])
+    if fmt is None:
+        pages = pages.at[page_ids].set(srcp.astype(pages.dtype))
+        return pages, scales
+    vals = code_to_f32(srcp, fmt)  # scale-1 decode of the dense cache codes
+    amax = jnp.max(jnp.abs(vals), axis=(1, 2, 3))
+    s = pow2_page_scale(amax, fmt)
+    codes = rescale_codes(srcp, (1.0 / s)[:, None, None, None], fmt,
+                          mode=mode, key=key)
+    pages = pages.at[page_ids].set(codes)
+    scales = scales.at[page_ids].set(s)
+    return pages, scales
