@@ -26,6 +26,13 @@ Paper artifacts:
 Framework:
   train_step_smoke        per-arch smoke train-step wall time.
   lns_matmul_kernel       Pallas kernel (interpret) vs XLA dequant matmul.
+  flash_attention_kernel  Pallas flash attention (interpret) wall time.
+  synthesis_scaling_law   achievable (op x mode) cells vs mantissa width.
+  serve_decode            dense vs paged KV-cache decode (tok/s, B/token)
+                          -> BENCH_2.json.
+  serve_continuous        continuous vs bucketed scheduler on a
+                          mixed-length Poisson request stream (tok/s, slot
+                          occupancy, preemptions) -> BENCH_3.json.
   roofline_summary        key roofline numbers from the dry-run artifacts.
 """
 import json
@@ -304,6 +311,68 @@ def serve_decode():
              f"cache_bytes={stats['cache_bytes']}", "B/token")
 
 
+def serve_continuous():
+    """Continuous vs bucketed scheduling on a mixed-length Poisson stream.
+
+    Same engine, same paged FP8 cache, same greedy sampling — only the
+    scheduler differs.  The stream mixes prompt lengths (the bucketed
+    scheduler compiles one prefill per (batch, length) combination and
+    blocks decode for each; the continuous scheduler runs everything
+    through two fixed-shape mixed-step traces) and staggers arrivals (the
+    bucketed scheduler's worst-case page reservation leaves slots idle that
+    the continuous scheduler fills, preempting if it overcommits).
+    Records tok/s, slot occupancy, page utilization and preemptions per
+    scheduler plus the continuous/bucketed ratios; the PR-3 acceptance run
+    writes them to BENCH_3.json:
+    ``python benchmarks/run.py serve_continuous --json=BENCH_3.json``.
+    """
+    from repro.configs import get_config
+    from repro.launch import serve
+
+    rng = np.random.default_rng(0)
+    plens = [4, 12, 20, 6, 16, 8, 24, 4]
+    gen = 8
+    queue = [rng.integers(0, 256, size=l) for l in plens]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(2.0, size=len(plens)))
+    ).astype(int)
+    cfg = get_config("qwen2-0.5b", smoke=True, quant="fp8_w8kv8")
+    results = {}
+    outs = {}
+    for sched in ("continuous", "bucketed"):
+        # deterministic KV rounding: stochastic writes are keyed by the
+        # engine step counter, which differs between schedulers, so the
+        # outputs_equal gate below must not depend on rounding noise
+        eng = serve.Engine(cfg, slots=4, max_seq=32, cache_impl="paged",
+                           page_size=8, num_pages=13, stochastic_kv=False)
+        outs[sched], stats = serve.run(
+            eng, [q.copy() for q in queue], gen=gen, quiet=True,
+            scheduler=sched, arrivals=arrivals, chunk=8,
+        )
+        results[sched] = stats
+        tag = f"serve_continuous/qwen2-0.5b-smoke/{sched}"
+        emit(f"{tag}/tok_s", f"{stats['tok_s']:.2f}",
+             f"steps={stats['steps']} slots=4 gen={gen} "
+             f"preemptions={stats['preemptions']} cpu", "tok/s")
+        emit(f"{tag}/slot_occupancy", f"{stats['slot_occupancy']:.3f}",
+             "fraction of slot-steps doing useful work", "x")
+        emit(f"{tag}/page_utilization", f"{stats['page_utilization']:.3f}",
+             "mean fraction of pool pages in use", "x")
+        if "mean_latency_steps" in stats:
+            emit(f"{tag}/mean_latency_steps",
+                 f"{stats['mean_latency_steps']:.1f}",
+                 "mean arrival-to-completion latency per request", "steps")
+    c, b = results["continuous"], results["bucketed"]
+    emit("serve_continuous/tok_s_ratio", f"{c['tok_s'] / b['tok_s']:.2f}",
+         "continuous tok/s over bucketed tok/s, same stream", "x")
+    emit("serve_continuous/occupancy_ratio",
+         f"{c['slot_occupancy'] / max(b['slot_occupancy'], 1e-9):.2f}",
+         "continuous slot occupancy over bucketed", "x")
+    emit("serve_continuous/outputs_equal",
+         int(outs["continuous"] == outs["bucketed"]),
+         "token-level equivalence of the two schedulers (greedy)")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -327,6 +396,7 @@ BENCHES = {
     "lns_matmul_kernel": lns_matmul_kernel,
     "flash_attention_kernel": flash_attention_kernel,
     "serve_decode": serve_decode,
+    "serve_continuous": serve_continuous,
     "roofline_summary": roofline_summary,
 }
 

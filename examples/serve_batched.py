@@ -1,8 +1,11 @@
-"""Batched serving with continuous batching on the paged KV cache.
+"""Batched serving on the paged FP8 KV cache: continuous or bucketed.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py \
           [--arch qwen2-0.5b] [--requests 6] [--slots 3] [--gen 12] \
-          [--quant fp8_w8kv8] [--cache-impl paged] [--page-size 8]
+          [--prompt-lens 4,12,8] [--quant fp8_w8kv8] \
+          [--scheduler continuous|bucketed] [--cache-impl paged|dense] \
+          [--page-size 8] [--pages N] [--chunk 4] [--arrival-rate 0.5] \
+          [--stream]
 """
 import pathlib
 import sys
@@ -13,25 +16,66 @@ import argparse
 
 from repro.launch import serve
 
+EPILOG = """\
+schedulers:
+  continuous   per-step admission with chunked prefill (long prompts never
+               block decode), preemption with page spill/restore when the
+               pool runs dry, per-step token streaming.  Default; needs
+               --cache-impl paged.
+  bucketed     the PR-2 baseline: requests admitted in prompt-length
+               buckets, one blocking batched prefill per bucket, worst-case
+               page reservation per request.  Works with paged and dense
+               caches.
+
+examples:
+  # mixed-length Poisson request stream through the continuous scheduler
+  python examples/serve_batched.py --requests 8 --slots 3 --gen 12 \\
+      --prompt-lens 4,12,20 --arrival-rate 0.5 --stream
+  # same stream through the bucketed baseline for comparison
+  python examples/serve_batched.py --requests 8 --slots 3 --gen 12 \\
+      --prompt-lens 4,12,20 --arrival-rate 0.5 --scheduler bucketed
+"""
+
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--gen", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prompt-lens", default="8",
+                    help="comma list of prompt lengths, cycled over requests")
     ap.add_argument("--quant", default="fp8_w8kv8")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "bucketed"])
     ap.add_argument("--cache-impl", default="paged", choices=["paged", "dense"])
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size (0 = worst case)")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="prefill tokens per step per slot (continuous)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean arrivals per step (Poisson stream; 0 = all "
+                         "queued at step 0)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens the step they are sampled")
     args = ap.parse_args()
-    serve.main([
+    argv = [
         "--arch", args.arch, "--smoke",
         "--requests", str(args.requests), "--slots", str(args.slots),
-        "--gen", str(args.gen), "--prompt-len", str(args.prompt_len),
-        "--quant", args.quant,
+        "--gen", str(args.gen), "--prompt-len", args.prompt_lens,
+        "--quant", args.quant, "--scheduler", args.scheduler,
         "--cache-impl", args.cache_impl, "--page-size", str(args.page_size),
-    ])
+        "--pages", str(args.pages), "--chunk", str(args.chunk),
+        "--arrival-rate", str(args.arrival_rate),
+    ]
+    if args.stream:
+        argv.append("--stream")
+    serve.main(argv)
 
 
 if __name__ == "__main__":

@@ -390,7 +390,16 @@ CARRY_INS: Dict[Tuple[str, str], Dict[str, CarrySpec]] = {
 
 
 def carry_in(fmt_name: str, op: str, mode: str, X, Y=None):
-    """Evaluate the carry-in bit for (format, op, mode) on code arrays."""
+    """Evaluate the carry-in bit for (format, op, mode) on code arrays.
+
+    Works on plain ints, numpy and jax arrays alike (the expressions use
+    only bitwise ops):
+
+    >>> carry_in("e5m2", "mul", "rne", 0b01, 0b10)  # eq. (7) fires
+    1
+    >>> carry_in("e5m2", "mul", "rz", 0b01, 0b10)   # RZ is a constant cell
+    0
+    """
     spec = CARRY_INS[(fmt_name, op)][mode]
     if spec is None:
         raise Unsupported(f"{fmt_name} {op} has no integer expression for {mode}")
@@ -439,6 +448,11 @@ def stochastic_carry_in(fmt_name: str, op: str, X, Y=None, *, rbits):
     ``rbits`` is a {0,1} integer array broadcastable against the operands
     (one independent uniform bit per element).  Works on numpy and
     jax.numpy inputs alike, and inside jit/Pallas.
+
+    >>> int(stochastic_carry_in("e5m2", "mul", 0b01, 0b01, rbits=0))  # RD
+    0
+    >>> int(stochastic_carry_in("e5m2", "mul", 0b01, 0b01, rbits=1))  # RU
+    1
     """
     rd, ru = directed_pair(fmt_name, op)
     c_rd = rd if isinstance(rd, int) else rd(X, Y)

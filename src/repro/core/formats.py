@@ -30,7 +30,18 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class FP8Format:
-    """Static description of an 8-bit floating-point format."""
+    """Static description of an 8-bit floating-point format.
+
+    >>> from repro.core.formats import E4M3, E5M2
+    >>> (E4M3.max_normal, E5M2.max_normal)
+    (448.0, 57344.0)
+    >>> (E4M3.bias, E4M3.B)  # the paper's b, and B = b << (p - 1)
+    (7, 56)
+    >>> float(E4M3.decode([0x08])[0])  # smallest positive normal, 2**-6
+    0.015625
+    >>> hex(E5M2.max_normal_code)
+    '0x7b'
+    """
 
     name: str
     exp_bits: int

@@ -107,6 +107,15 @@ def lns_op_raw(fmt: FP8Format | str, op: str, mode: str, X, Y=None, *, rbits=Non
     ``mode="stochastic"`` selects per element between the RD and RU carry-in
     expressions with ``rbits`` (a {0,1} array) — stochastic rounding realized
     as a carry-in (see carry_ins.stochastic_carry_in).
+
+    FP8 multiplication really is one integer add (plus the constant and the
+    carry-in): with the e5m2 codes 0x40 = 2.0 and 0x44 = 4.0,
+
+    >>> hex(int(lns_op_raw("e5m2", "mul", "rne", 0x40, 0x44)))  # 2.0 * 4.0
+    '0x48'
+    >>> from repro.core.formats import E5M2
+    >>> float(E5M2.decode([0x48])[0])
+    8.0
     """
     if isinstance(fmt, str):
         fmt = FORMATS[fmt]

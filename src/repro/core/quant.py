@@ -41,6 +41,13 @@ def encode(x, fmt: FP8Format | str, mode: str = "rne", *, key=None):
 
     Modes: ``rne`` (default), ``rz``, ``stochastic`` (needs ``key``).
     NaN -> canonical NaN code; +-inf saturates to +-max_normal.
+
+    >>> hex(int(encode(2.0, "e5m2")))
+    '0x40'
+    >>> hex(int(encode(-448.0, "e4m3")))  # sign bit + top normal code
+    '0xfe'
+    >>> int(encode(1e6, "e5m2")) == FORMATS["e5m2"].max_normal_code
+    True
     """
     if isinstance(fmt, str):
         fmt = FORMATS[fmt]

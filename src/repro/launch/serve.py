@@ -1,8 +1,18 @@
-"""Serving driver: batched prefill + decode with continuous batching.
+"""Serving driver: two schedulers over a fixed pool of batch slots.
 
-A fixed pool of batch slots; finished sequences (EOS or budget) release
-their slot and the next queued requests are prefilled into it **in one
-batched prefill call**.  Greedy or temperature sampling.
+``--scheduler`` selects how requests reach the model:
+
+  * ``continuous`` (default): per-step admission into free slots
+    mid-flight, **chunked prefill** through the same mixed step that
+    decodes the other slots (long prompts never block decode), preemption
+    with page spill/restore when the pool runs dry, and per-step token
+    streaming.  The state machine lives in ``serving.scheduler``; this
+    module's ``Engine`` executes its decisions.  Needs ``cache-impl
+    paged``.
+  * ``bucketed``: the PR-2 baseline — requests admitted in prompt-length
+    buckets, one blocking batched prefill per bucket, worst-case page
+    reservation per request.  Kept so the continuous scheduler's wins stay
+    measurable (``benchmarks/run.py serve_continuous``).
 
 Two cache backends (``--cache-impl``):
 
@@ -14,7 +24,7 @@ Two cache backends (``--cache-impl``):
     writes use stochastic-rounding carry-ins.  MLA/SSM/cross caches keep
     dense per-slot entries.
   * ``dense``: the original per-slot [slots, max_seq] cache, kept so the
-    paged path's wins stay measurable.
+    paged path's wins stay measurable (bucketed scheduler only).
 
 Both backends drive every slot at its own position (a per-slot position
 vector through ``Model.decode_step``), so slots with different history
@@ -23,7 +33,8 @@ lengths coexist in one decode batch.
 CPU smoke scale:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 6 --slots 2 --gen 16 --quant fp8_w8kv8 --cache-impl paged
+      --requests 6 --slots 2 --gen 16 --quant fp8_w8kv8 \
+      --scheduler continuous --arrival-rate 0.5 --stream
 """
 from __future__ import annotations
 
@@ -38,7 +49,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import Model
-from ..serving import PagePool, write_prefill_pages
+from ..serving import ContinuousScheduler, PagePool, Request, write_prefill_pages
 
 
 def cache_bytes(tree) -> int:
@@ -82,6 +93,9 @@ class Engine:
             )
             self._decode_paged = jax.jit(
                 self.model.decode_step_paged, static_argnames=("page_size",)
+            )
+            self._mixed_step = jax.jit(
+                self.model.step_paged, static_argnames=("page_size",)
             )
         else:
             raise ValueError(f"unknown cache_impl {cache_impl!r}")
@@ -240,6 +254,105 @@ class Engine:
         self._step += 1
         return np.asarray(logits[:, : self.cfg.vocab])
 
+    def step_chunk(self, tokens: np.ndarray, lengths: np.ndarray,
+                   n_new: np.ndarray):
+        """Mixed prefill+decode step (continuous scheduler).
+
+        tokens: [slots, T]; lengths/n_new: [slots].  Slots with ``n_new >
+        1`` consume a prefill chunk, ``n_new == 1`` decode one token,
+        ``n_new == 0`` idle.  The scheduler has already allocated pages for
+        ``lengths + n_new`` tokens per slot.  Returns each slot's
+        last-valid-token logits [slots, vocab].
+        """
+        key = None
+        if self._kv_key is not None:
+            key = jax.random.fold_in(self._kv_key, self._step)
+        logits, self.cache = self._mixed_step(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(lengths, jnp.int32), jnp.asarray(n_new, jnp.int32),
+            jnp.asarray(self.pool.block_tables),
+            page_size=self.page_size, key=key,
+        )
+        self._step += 1
+        return np.asarray(logits[:, : self.cfg.vocab])
+
+    # ------------------------------------------------------------------ #
+    def _map_entries(self, fn):
+        """Apply ``fn(entry, stacked)`` over every cache entry, rebuilding
+        the cache pytree (prefix entries are unstacked; block entries carry
+        a leading n_blocks axis)."""
+        return {
+            "prefix": tuple(fn(e, False) for e in self.cache["prefix"]),
+            "blocks": tuple(fn(e, True) for e in self.cache["blocks"]),
+        }
+
+    def preempt_slot(self, slot: int) -> dict:
+        """Spill ``slot`` to the host: copy its page *codes* + scales out of
+        every paged entry and its per-slot rows out of every dense entry
+        (MLA latents, SSM states), then free its pages.  The copies are
+        verbatim — never re-quantized — so a later :meth:`restore_slot` is
+        bit-identical.  Returns the spill record."""
+        ids = jnp.asarray(np.asarray(self.pool.pages_of[slot], np.int32))
+
+        def gather(e, stacked):
+            out = {}
+            for name, v in e.items():
+                if isinstance(v, dict) and "kp" in v:
+                    ax = 1 if stacked else 0
+                    out[name] = {k: jnp.take(v[k], ids, axis=ax) for k in v}
+                elif isinstance(v, dict):
+                    out[name] = {
+                        k: (v[k][:, slot] if stacked else v[k][slot])
+                        for k in v
+                    }
+                else:
+                    out[name] = v[:, slot] if stacked else v[slot]
+            return out
+
+        state = jax.device_get(self._map_entries(gather))
+        n_pages = len(self.pool.spill_slot(slot))
+        return {"n_pages": n_pages, "state": state}
+
+    def restore_slot(self, slot: int, record: dict) -> None:
+        """Re-admit a preempted request into ``slot``: allocate fresh pages
+        (ids may differ from the spilled ones) and scatter the saved codes,
+        scales and dense rows back."""
+        new_ids = self.pool.restore_slot(slot, record["n_pages"])
+        ids = jnp.asarray(np.asarray(new_ids, np.int32))
+        saved = record["state"]
+        which = {"i": 0}
+
+        def scatter(e, stacked):
+            s = saved["blocks" if stacked else "prefix"][which["i"]]
+            out = {}
+            for name, v in e.items():
+                if isinstance(v, dict) and "kp" in v:
+                    out[name] = {
+                        k: (v[k].at[:, ids].set(s[name][k]) if stacked
+                            else v[k].at[ids].set(s[name][k]))
+                        for k in v
+                    }
+                elif isinstance(v, dict):
+                    out[name] = {
+                        k: (v[k].at[:, slot].set(s[name][k]) if stacked
+                            else v[k].at[slot].set(s[name][k]))
+                        for k in v
+                    }
+                else:
+                    out[name] = (v.at[:, slot].set(s[name]) if stacked
+                                 else v.at[slot].set(s[name]))
+            return out
+
+        prefix = []
+        for e in self.cache["prefix"]:
+            which["i"] = len(prefix)
+            prefix.append(scatter(e, False))
+        blocks = []
+        for e in self.cache["blocks"]:
+            which["i"] = len(blocks)
+            blocks.append(scatter(e, True))
+        self.cache = {"prefix": tuple(prefix), "blocks": tuple(blocks)}
+
     def release(self, slot: int):
         if self.pool is not None:
             self.pool.free_slot(slot)
@@ -266,8 +379,33 @@ def sample(logits: np.ndarray, temperature: float, rng: np.random.Generator):
 
 
 def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
-        temperature: float = 0.0, seed: int = 0, quiet: bool = False):
-    """Continuous-batching loop over ``queue``.  Returns (outputs, stats)."""
+        temperature: float = 0.0, seed: int = 0, quiet: bool = False,
+        scheduler: str = "bucketed", arrivals=None, chunk: int = 4,
+        on_token=None):
+    """Serve ``queue`` to completion.  Returns (outputs, stats).
+
+    ``scheduler``: "bucketed" (batched length-bucket prefills, worst-case
+    page reservation) or "continuous" (chunked prefill + preemption, paged
+    cache only).  ``arrivals`` optionally gives each request's arrival step
+    (Poisson-stream simulation); ``on_token(rid, token, step)`` streams
+    tokens as they are sampled.
+    """
+    if scheduler == "continuous":
+        return run_continuous(eng, queue, gen=gen, temperature=temperature,
+                              seed=seed, quiet=quiet, arrivals=arrivals,
+                              chunk=chunk, on_token=on_token)
+    if scheduler != "bucketed":
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    return run_bucketed(eng, queue, gen=gen, temperature=temperature,
+                        seed=seed, quiet=quiet, arrivals=arrivals,
+                        on_token=on_token)
+
+
+def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
+                 temperature: float = 0.0, seed: int = 0, quiet: bool = False,
+                 arrivals=None, on_token=None):
+    """Bucketed-admission loop over ``queue`` (the PR-2 baseline).
+    Returns (outputs, stats)."""
     rng = np.random.default_rng(seed)
     requests = len(queue)
     img_off = eng.cfg.n_img_tokens if eng.cfg.family == "vlm" else 0
@@ -278,6 +416,7 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
     t0 = time.time()
     steps = 0
     decoded_tokens = 0
+    occupied_slot_steps = 0
 
     while len(outputs) < requests:
         # ---- batched admission into every free slot ------------------- #
@@ -288,6 +427,8 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
         for slot in range(eng.slots):
             if slot in active or next_req >= requests:
                 continue
+            if arrivals is not None and arrivals[next_req] > steps:
+                break  # FIFO: the next request has not arrived yet
             if eng.pool is not None:
                 worst = eng.pool.pages_needed(
                     queue[next_req].shape[0] + img_off + gen
@@ -322,6 +463,15 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
                         rid=base_rid + i, pos=plen_total,
                         out=[int(first[j])], last=int(first[j]),
                     )
+                    if on_token is not None:
+                        on_token(base_rid + i, int(first[j]), steps)
+
+        if not active:
+            # nothing in flight (requests still arriving): let time pass
+            steps += 1
+            if eng.pool is not None:
+                eng.pool.observe_step()
+            continue
 
         # ---- one decode step for the whole pool ----------------------- #
         toks = np.zeros((eng.slots,), np.int32)
@@ -335,12 +485,17 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
             logits = eng.decode(toks, pos)
         steps += 1
         decoded_tokens += len(active)
+        occupied_slot_steps += len(active)
+        if eng.pool is not None:
+            eng.pool.observe_step()
         nxt = sample(logits, temperature, rng)
         done = []
         for slot, st in list(active.items()):
             st["last"] = int(nxt[slot])
             st["out"].append(st["last"])
             st["pos"] += 1
+            if on_token is not None:
+                on_token(st["rid"], st["last"], steps)
             if len(st["out"]) >= gen:
                 outputs[st["rid"]] = st["out"]
                 done.append(slot)
@@ -353,22 +508,89 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
     stats = dict(
         steps=steps, wall_s=dt,
         tok_s=decoded_tokens / dt if dt > 0 else 0.0,
+        slot_occupancy=occupied_slot_steps / max(steps * eng.slots, 1),
+        preemptions=0,
         cache_bytes=eng.kv_cache_bytes(),
         cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
     )
+    if eng.pool is not None:
+        stats["page_utilization"] = eng.pool.mean_utilization()
     if not quiet:
-        print(f"[serve:{eng.cache_impl}] {requests} requests, {steps} decode "
-              f"steps, {stats['tok_s']:.1f} tok/s, cache "
+        print(f"[serve:bucketed:{eng.cache_impl}] {requests} requests, "
+              f"{steps} decode steps, {stats['tok_s']:.1f} tok/s, "
+              f"occupancy {stats['slot_occupancy']:.2f}, cache "
               f"{stats['cache_bytes'] / 1e6:.2f} MB "
               f"({stats['cache_bytes_per_token']:.0f} B/token capacity)")
     return outputs, stats
 
 
+def run_continuous(eng: Engine, queue: List[np.ndarray], *, gen: int,
+                   temperature: float = 0.0, seed: int = 0,
+                   quiet: bool = False, arrivals=None, chunk: int = 4,
+                   on_token=None):
+    """Continuous-batching loop: chunked prefill, mid-flight joins,
+    preemption with page spill/restore, per-step streaming.  Returns
+    (outputs, stats)."""
+    if eng.cache_impl != "paged":
+        raise ValueError(
+            "the continuous scheduler drives the paged engine; rerun with "
+            "cache_impl='paged' (dense caches use scheduler='bucketed')"
+        )
+    if eng.cfg.family in ("vlm", "encdec"):
+        raise ValueError(
+            f"continuous scheduling needs decode-only prefill, which the "
+            f"{eng.cfg.family!r} family's prefix inputs (image/encoder "
+            "context) do not support; use scheduler='bucketed'"
+        )
+    rng = np.random.default_rng(seed)
+
+    def sample_row(row: np.ndarray) -> int:
+        return int(sample(row[None], temperature, rng)[0])
+
+    sched = ContinuousScheduler(eng, chunk=chunk, sample=sample_row,
+                                on_token=on_token)
+    for i, prompt in enumerate(queue):
+        sched.add(Request(
+            rid=i, prompt=np.asarray(prompt), gen=gen,
+            arrival=0 if arrivals is None else int(arrivals[i]),
+        ))
+    t0 = time.time()
+    outputs = sched.run()
+    dt = time.time() - t0
+    stats = dict(
+        steps=sched.steps, wall_s=dt,
+        tok_s=sched.decoded_tokens / dt if dt > 0 else 0.0,
+        prefill_tokens=sched.prefill_tokens,
+        slot_occupancy=sched.occupied_slot_steps / max(sched.steps * eng.slots, 1),
+        mean_latency_steps=sched.mean_latency_steps(),
+        preemptions=sched.preemptions,
+        page_utilization=eng.pool.mean_utilization(),
+        cache_bytes=eng.kv_cache_bytes(),
+        cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
+    )
+    if not quiet:
+        print(f"[serve:continuous:{eng.cache_impl}] {len(queue)} requests, "
+              f"{sched.steps} steps, {stats['tok_s']:.1f} tok/s, occupancy "
+              f"{stats['slot_occupancy']:.2f}, {sched.preemptions} "
+              f"preemptions, cache {stats['cache_bytes'] / 1e6:.2f} MB "
+              f"({stats['cache_bytes_per_token']:.0f} B/token capacity)")
+    return outputs, stats
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Serve random prompts through the paged LNS engine.",
+        epilog="Schedulers: 'continuous' (chunked prefill, mid-flight "
+               "joins, preemption with page spill/restore; paged cache "
+               "only) or 'bucketed' (batched length-bucket prefills, "
+               "worst-case page reservation; paged or dense cache).",
+    )
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quant", default="none")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "bucketed"],
+                    help="admission policy (default: continuous)")
     ap.add_argument("--cache-impl", default="paged",
                     choices=["paged", "dense"])
     ap.add_argument("--page-size", type=int, default=16)
@@ -376,24 +598,50 @@ def main(argv=None):
                     help="page-pool size (0 = worst-case slots*max_seq)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prompt-len", default="8",
+                    help="prompt length, or a comma list cycled over the "
+                         "requests for a mixed-length stream (e.g. 4,12,8)")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="prefill tokens per step per slot (continuous)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean request arrivals per step for a simulated "
+                         "Poisson stream (0 = everything queued at step 0)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each token the step it is sampled")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke, quant=args.quant)
-    max_seq = args.prompt_len + args.gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    if args.scheduler == "continuous" and (
+        args.cache_impl == "dense" or cfg.family in ("vlm", "encdec")
+    ):
+        print("# continuous scheduling needs a paged cache and decode-only "
+              "prefill; falling back to the bucketed scheduler")
+        args.scheduler = "bucketed"
+    plens = [int(s) for s in str(args.prompt_len).split(",") if s]
+    max_seq = max(plens) + args.gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
     eng = Engine(
         cfg, slots=args.slots, max_seq=max_seq,
         cache_impl=args.cache_impl, page_size=args.page_size,
         num_pages=args.pages or None, rng_seed=args.seed,
     )
     rng = np.random.default_rng(args.seed)
-    queue = [rng.integers(0, cfg.vocab, size=args.prompt_len)
-             for _ in range(args.requests)]
+    queue = [rng.integers(0, cfg.vocab, size=plens[i % len(plens)])
+             for i in range(args.requests)]
+    arrivals = None
+    if args.arrival_rate > 0:
+        inter = rng.exponential(1.0 / args.arrival_rate, size=args.requests)
+        arrivals = np.floor(np.cumsum(inter)).astype(int)
+    on_token = None
+    if args.stream:
+        def on_token(rid, tok, step):
+            print(f"  step{step:4d} req{rid}: {tok}")
     outputs, _ = run(eng, queue, gen=args.gen,
-                     temperature=args.temperature, seed=args.seed)
+                     temperature=args.temperature, seed=args.seed,
+                     scheduler=args.scheduler, arrivals=arrivals,
+                     chunk=args.chunk, on_token=on_token)
     for rid in sorted(outputs):
         print(f"  req{rid}: {outputs[rid][:10]}...")
     return outputs

@@ -159,6 +159,11 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
     logical = lengths // page_size
     page_ids = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     rows = lengths - logical * page_size
+    active = paged.get("active")
+    if active is not None:
+        # masked sub-step (mixed prefill+decode): inactive slots scribble
+        # into the reserved null page instead of their own pages
+        page_ids = jnp.where(active, page_ids, 0)
     key = paged.get("key")
     kk, vk = (None, None) if key is None else tuple(jax.random.split(key))
     mode = "stochastic" if key is not None else cfg.quant.mode
@@ -226,7 +231,10 @@ def mla_forward(p, x, cfg, *, positions, q_chunk=512, kv_chunk=1024, **_):
     k = jnp.concatenate([k_nope, jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, dr))], axis=-1)
     out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
     y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.quant)
-    return y, {"ckv": ckv, "kpe": kpe}
+    # cache representation must match the decode path: FP8 codes when the
+    # KV cache is quantized (a raw float here would be garbage-cast to
+    # uint8 by the serving splice)
+    return y, {"ckv": _kv_store(ckv, cfg), "kpe": _kv_store(kpe, cfg)}
 
 
 def mla_decode(p, x, cfg, *, cache, pos, **_):

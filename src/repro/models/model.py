@@ -211,6 +211,21 @@ class Model:
         page pool; MLA/SSM/cross entries keep their dense slot caches,
         indexed by per-slot positions.  Returns (logits, new_cache).
         """
+        return self._paged_token_step(
+            params, cache, tokens, lengths, block_tables,
+            page_size=page_size, key=key, active=None,
+        )
+
+    def _paged_token_step(self, params, cache, tokens, lengths, block_tables,
+                          *, page_size: int, key, active):
+        """Shared body of the paged decode/mixed steps.
+
+        ``active`` is None (every slot live — the plain decode path, traced
+        without any masking ops) or a [B] bool vector: inactive slots'
+        page writes are redirected to the reserved null page and their dense
+        cache entries (MLA latents, SSM states) are kept unchanged, so a
+        masked sub-step is a no-op for them.
+        """
         cfg = self.cfg
         B = tokens.shape[0]
         lengths = jnp.asarray(lengths, jnp.int32)
@@ -219,6 +234,7 @@ class Model:
             "lengths": lengths,
             "page_size": page_size,
             "key": key,
+            "active": active,
         }
         x = self._embed(params, tokens[:, None])
         if cfg.family == "encdec":
@@ -242,6 +258,58 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._unembed(params, x[:, 0])
         return logits, {"prefix": tuple(new_prefix), "blocks": new_caches}
+
+    def step_paged(self, params, cache, tokens, lengths, n_new, block_tables,
+                   *, page_size: int, key=None):
+        """Mixed prefill+decode step over the paged cache (the continuous
+        scheduler's model call).
+
+        tokens: [B, T] int32 — up to T new tokens per slot; lengths: [B]
+        int32 context length BEFORE the step; n_new: [B] int32 valid-token
+        count per row (0 = idle slot, 1 = a decode step, >1 = a prefill
+        chunk); block_tables: [B, maxp] int32.
+
+        Internally scans T single-token sub-steps with per-slot active
+        masks: sub-step t processes ``tokens[:, t]`` at position
+        ``lengths + t`` for slots with ``t < n_new``.  Inactive slots'
+        page writes land in the reserved null page and their dense cache
+        rows are kept via a select, so a decode slot (1 valid token) and a
+        mid-prefill slot (T valid tokens) coexist in one jitted call —
+        chunked prefill never blocks decode.  The caller must have
+        allocated pages for ``lengths + n_new`` tokens per slot.
+
+        Returns (logits [B, vocab_padded] of each slot's LAST valid token —
+        zeros for idle slots — and the new cache).
+        """
+        cfg = self.cfg
+        B, T = tokens.shape
+        tokens = jnp.asarray(tokens, jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        n_new = jnp.asarray(n_new, jnp.int32)
+        use_key = key is not None
+        keys = (
+            jax.random.split(key, T) if use_key
+            else jnp.zeros((T, 2), jnp.uint32)
+        )
+        last0 = jnp.zeros((B, cfg.vocab_padded), jnp.float32)
+
+        def body(carry, scanned):
+            cache, last = carry
+            t, toks_t, key_t = scanned
+            act = t < n_new
+            pos = lengths + jnp.minimum(t, jnp.maximum(n_new - 1, 0))
+            logits, cache = self._paged_token_step(
+                params, cache, toks_t, pos, block_tables,
+                page_size=page_size, key=key_t if use_key else None,
+                active=act,
+            )
+            last = jnp.where(act[:, None], logits, last)
+            return (cache, last), None
+
+        (cache, last), _ = jax.lax.scan(
+            body, (cache, last0), (jnp.arange(T), tokens.T, keys)
+        )
+        return last, cache
 
     # ------------------------------------------------------------------ #
     def _entry_cache(self, spec: SubSpec, B: int, S: int):

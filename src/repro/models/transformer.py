@@ -184,10 +184,22 @@ def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None,
                 p["attn"], h, cfg, is_global=spec.attn_global,
                 cache=cache["self"], pos=pos, use_rope=_use_rope(cfg),
             )
-        new_cache["self"] = c
     else:
         out, c = ssd_decode(p["mamba"], h, cfg, cache["self"])
-        new_cache["self"] = c
+    active = None if paged is None else paged.get("active")
+    if active is not None and "kp" not in c:
+        # masked sub-step of a mixed prefill+decode batch: dense per-slot
+        # entries (MLA latents, SSM states, dense KV rows) of inactive
+        # slots must not advance — keep the old entry for them.  Paged
+        # entries need no select: their inactive writes already went to
+        # the null page (gqa_decode_paged).
+        c = jax.tree.map(
+            lambda nv, ov: jnp.where(
+                active.reshape((-1,) + (1,) * (nv.ndim - 1)), nv, ov
+            ),
+            c, cache["self"],
+        )
+    new_cache["self"] = c
     if cfg.sandwich_norm:
         out = rms_norm(out, p["ln1_post"], cfg.norm_eps)
     x = x + out

@@ -1,8 +1,10 @@
 """Serving subsystem: paged FP8 KV cache + integer-domain decode attention.
 
 ``page_pool`` owns the global page pool (host allocator + device write
-helpers); ``kernels.paged_attention`` consumes the paged layout; the
-``Engine`` in ``launch.serve`` drives admission, decode and eviction on top.
+helpers); ``kernels.paged_attention`` consumes the paged layout;
+``scheduler`` is the continuous-batching admission/preemption state
+machine; the ``Engine`` in ``launch.serve`` executes its decisions
+(mixed prefill+decode steps, page spills/restores, eviction).
 """
 from .page_pool import (
     PagePool,
@@ -12,9 +14,12 @@ from .page_pool import (
     write_prefill_pages,
     write_token_page,
 )
+from .scheduler import ContinuousScheduler, Request
 
 __all__ = [
+    "ContinuousScheduler",
     "PagePool",
+    "Request",
     "encode_kv",
     "pow2_page_scale",
     "rescale_codes",

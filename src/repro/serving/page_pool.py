@@ -73,6 +73,12 @@ class PagePool:
         self._free: List[int] = list(range(1, num_pages))
         self.block_tables = np.zeros((slots, max_pages_per_slot), np.int32)
         self.pages_of = [[] for _ in range(slots)]
+        # watermark / churn accounting (read by the scheduler and benches)
+        self.peak_used_pages = 0
+        self.used_page_steps = 0  # sum over observe_step() of used_pages
+        self.observed_steps = 0
+        self.spills = 0
+        self.restores = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -82,6 +88,17 @@ class PagePool:
     @property
     def used_pages(self) -> int:
         return (self.num_pages - 1) - len(self._free)
+
+    def observe_step(self) -> None:
+        """Record one scheduler step for the occupancy watermark stats."""
+        self.used_page_steps += self.used_pages
+        self.observed_steps += 1
+
+    def mean_utilization(self) -> float:
+        """Mean fraction of (non-null) pages in use over observed steps."""
+        if not self.observed_steps or self.num_pages <= 1:
+            return 0.0
+        return self.used_page_steps / (self.observed_steps * (self.num_pages - 1))
 
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -105,6 +122,7 @@ class PagePool:
         start = len(owned)
         owned.extend(ids)
         self.block_tables[slot, start:start + len(ids)] = ids
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return ids
 
     def free_slot(self, slot: int) -> None:
@@ -112,6 +130,27 @@ class PagePool:
         self._free.extend(self.pages_of[slot])
         self.pages_of[slot] = []
         self.block_tables[slot] = 0
+
+    def spill_slot(self, slot: int) -> List[int]:
+        """Preemption: release ``slot``'s pages, returning their ids in
+        logical order so the caller can copy the page *contents* out of the
+        device arrays first (``Engine.preempt_slot``).  The freed ids are
+        prepended to the free list — :meth:`alloc` pops from the END — so
+        an immediate re-allocation by another slot prefers other pages; a
+        restore-after-spill round trip through the same physical pages
+        would mask block-table bugs in tests."""
+        ids = list(self.pages_of[slot])
+        self.free_slot(slot)
+        self._free = ids + [i for i in self._free if i not in set(ids)]
+        self.spills += 1
+        return ids
+
+    def restore_slot(self, slot: int, n: int) -> List[int]:
+        """Re-allocate ``n`` pages for a preempted request joining ``slot``
+        (the caller scatters the saved page contents back into them)."""
+        assert not self.pages_of[slot], "restore target slot must be empty"
+        self.restores += 1
+        return self.alloc(slot, n)
 
     def ensure_capacity(self, slot: int, n_tokens: int) -> None:
         """Allocate pages so ``slot`` can hold ``n_tokens`` tokens."""

@@ -1,0 +1,295 @@
+"""Continuous-batching scheduler: the host-side admission/preemption state
+machine that drives the paged serving engine one step at a time.
+
+Where the bucketed scheduler (``launch.serve.run_bucketed``) admits requests
+in prompt-length buckets — one blocking batched prefill per bucket, with a
+worst-case page reservation per request — this scheduler keeps every slot
+busy every step:
+
+  * **Chunked prefill.**  A prompt is fed ``chunk`` tokens per step through
+    the same mixed step that decodes the other slots
+    (``Model.step_paged``), so a long prompt never blocks decode steps and
+    there is exactly one model trace however many prompt lengths are in
+    flight (the bucketed path compiles one prefill per (batch, length)
+    combination).
+  * **Per-step admission.**  A queued request joins a free slot the step it
+    arrives, needing only its *first chunk* of pages up front — no
+    worst-case reservation, so the pool can overcommit.
+  * **Preemption with spill/restore.**  When the pool runs dry mid-flight,
+    the lowest-priority (youngest) slot is spilled: its page *codes* are
+    copied out verbatim (``Engine.preempt_slot``), its pages freed, and the
+    request parked.  Restore re-allocates pages and scatters the saved
+    codes back — bit-identical, never re-quantized, so a preempted request
+    resumes exactly where it left off.  The oldest active request is never
+    preempted, which guarantees forward progress.
+  * **Streaming.**  Each sampled token is surfaced through ``on_token`` the
+    step it is produced.
+
+Request lifecycle::
+
+    QUEUED --admit--> PREFILL --last chunk--> DECODE --gen tokens--> DONE
+                        ^  \\                  ^  \\
+                        |   +--pool dry-------+   |
+                        +------- PREEMPTED <------+
+                                 (spilled; resumes with restored pages)
+
+The scheduler is pure host-side Python/numpy; the engine collaborator only
+needs ``slots``, ``pool``, ``step_chunk``, ``preempt_slot``,
+``restore_slot`` and ``release`` (see ``launch.serve.Engine``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["Request", "ContinuousScheduler",
+           "QUEUED", "PREFILL", "DECODE", "PREEMPTED", "DONE"]
+
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+PREEMPTED = "preempted"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its scheduling state."""
+
+    rid: int
+    prompt: np.ndarray
+    gen: int
+    arrival: int = 0  # step index at which the request becomes admissible
+    state: str = QUEUED
+    n_prefilled: int = 0  # prompt tokens already written to the KV cache
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    spill: Optional[dict] = None  # engine spill record while PREEMPTED
+    preemptions: int = 0
+    finished_step: int = -1  # -> per-request latency in the run stats
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def length(self) -> int:
+        """Tokens currently written into the KV cache: the prefilled prompt
+        plus every generated token except the last (sampled but not yet fed
+        back)."""
+        return self.n_prefilled + max(0, len(self.out) - 1)
+
+    @property
+    def last_token(self) -> int:
+        return self.out[-1]
+
+    def finished(self) -> bool:
+        return len(self.out) >= self.gen
+
+
+class ContinuousScheduler:
+    """Per-step admission / chunked-prefill / preemption loop.
+
+    ``sample`` maps one logits row (np.ndarray [vocab]) to a token id;
+    ``on_token(rid, token, step)`` streams tokens out as they are produced.
+    """
+
+    def __init__(self, eng, *, chunk: int = 4,
+                 sample: Optional[Callable[[np.ndarray], int]] = None,
+                 on_token: Optional[Callable[[int, int, int], None]] = None):
+        self.eng = eng
+        self.pool = eng.pool
+        self.chunk = max(1, int(chunk))
+        self.sample = sample if sample is not None else (
+            lambda row: int(np.argmax(row))
+        )
+        self.on_token = on_token
+        self.queued: List[Request] = []
+        self.preempted: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.outputs: Dict[int, List[int]] = {}
+        # stats
+        self.steps = 0
+        self.decoded_tokens = 0
+        self.prefill_tokens = 0
+        self.occupied_slot_steps = 0
+        self.preemptions = 0
+
+    # ------------------------------------------------------------------ #
+    def add(self, req: Request) -> None:
+        self.queued.append(req)
+
+    def pending(self) -> bool:
+        return bool(self.queued or self.preempted or self.active)
+
+    # ------------------------------------------------------------------ #
+    def _admit(self) -> None:
+        free = [s for s in range(self.eng.slots) if s not in self.active]
+
+        # Preempted requests resume first (oldest arrival first) — strictly
+        # in order, so a large old request is not starved by smaller young
+        # ones slipping past it.
+        while free and self.preempted:
+            req = min(self.preempted, key=lambda r: (r.arrival, r.rid))
+            if not self.pool.can_alloc(req.spill["n_pages"]):
+                if not self.active and self.pool.used_pages == 0:
+                    raise RuntimeError(
+                        f"request {req.rid} needs {req.spill['n_pages']} "
+                        f"pages to resume but the whole pool has only "
+                        f"{self.pool.num_pages - 1}; raise --pages"
+                    )
+                break  # wait for in-flight work to free pages
+            slot = free.pop(0)
+            self.eng.restore_slot(slot, req.spill)
+            req.spill = None
+            req.slot = slot
+            req.state = DECODE if req.n_prefilled >= req.plen else PREFILL
+            self.preempted.remove(req)
+            self.active[slot] = req
+
+        # New admissions: FIFO over arrived requests.  Held back while
+        # anything is preempted (spilled work resumes first — admitting
+        # fresh requests over it would thrash the pool).  A request only
+        # needs its first prefill chunk's pages to join.
+        budget = self.pool.free_pages
+        while free and self.queued and not self.preempted:
+            req = self.queued[0]
+            if req.arrival > self.steps:
+                break
+            first = self.pool.pages_needed(min(self.chunk, req.plen))
+            if first > budget:
+                if not self.active and self.pool.used_pages == 0:
+                    raise RuntimeError(
+                        f"request {req.rid} needs {first} pages for its "
+                        f"first prefill chunk but the pool has only "
+                        f"{self.pool.num_pages - 1}; raise --pages"
+                    )
+                break
+            budget -= first
+            slot = free.pop(0)
+            req.slot = slot
+            req.state = PREFILL
+            self.active[slot] = req
+            self.queued.pop(0)
+
+    # ------------------------------------------------------------------ #
+    def _plan(self) -> Dict[int, tuple]:
+        """slot -> (tokens_to_feed, n_new) for every active slot."""
+        plan: Dict[int, tuple] = {}
+        for slot, req in self.active.items():
+            if req.state == PREFILL:
+                n = min(self.chunk, req.plen - req.n_prefilled)
+                toks = req.prompt[req.n_prefilled:req.n_prefilled + n]
+            else:
+                n = 1
+                toks = [req.last_token]
+            plan[slot] = (list(map(int, toks)), n)
+        return plan
+
+    def _preempt_victim(self) -> int:
+        """Spill the lowest-priority (youngest-arrival, rid tiebreak)
+        active slot; returns the freed slot id."""
+        victim = max(self.active.values(), key=lambda r: (r.arrival, r.rid))
+        slot = victim.slot
+        victim.spill = self.eng.preempt_slot(slot)
+        victim.state = PREEMPTED
+        victim.slot = -1
+        victim.preemptions += 1
+        self.preemptions += 1
+        del self.active[slot]
+        self.preempted.append(victim)
+        return slot
+
+    def _fit(self, plan: Dict[int, tuple]) -> None:
+        """Make the step's page demand fit the pool, preempting youngest
+        slots when it runs dry, then allocate."""
+        while True:
+            need = 0
+            for slot, (_, n) in plan.items():
+                req = self.active[slot]
+                need += max(
+                    0,
+                    self.pool.pages_needed(req.length + n)
+                    - len(self.pool.pages_of[slot]),
+                )
+            if need <= self.pool.free_pages:
+                break
+            if len(self.active) <= 1:
+                req = next(iter(self.active.values()))
+                raise RuntimeError(
+                    f"request {req.rid} needs more pages than the pool "
+                    f"holds ({self.pool.num_pages - 1}); raise --pages or "
+                    "lower --gen/--prompt-len"
+                )
+            plan.pop(self._preempt_victim(), None)
+        for slot, (_, n) in plan.items():
+            req = self.active[slot]
+            self.pool.ensure_capacity(slot, req.length + n)
+
+    # ------------------------------------------------------------------ #
+    def _commit(self, plan: Dict[int, tuple], logits: np.ndarray) -> None:
+        finished = []
+        for slot, (_, n) in plan.items():
+            req = self.active[slot]
+            if req.state == PREFILL:
+                req.n_prefilled += n
+                self.prefill_tokens += n
+                if req.n_prefilled < req.plen:
+                    continue
+                req.state = DECODE  # last prompt token's logits sample next
+            else:
+                self.decoded_tokens += 1
+            tok = self.sample(logits[slot])
+            req.out.append(tok)
+            if self.on_token is not None:
+                self.on_token(req.rid, tok, self.steps)
+            if req.finished():
+                finished.append(slot)
+        for slot in finished:
+            req = self.active.pop(slot)
+            req.state = DONE
+            req.finished_step = self.steps
+            self.finished.append(req)
+            self.outputs[req.rid] = req.out
+            self.eng.release(slot)
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> None:
+        """One scheduler step: admit, fit (maybe preempt), run the mixed
+        model step, sample/stream, evict finished slots."""
+        self._admit()
+        plan = self._plan()
+        self._fit(plan)
+        if plan:
+            # T is 1 on pure-decode steps and ``chunk`` whenever a prefill
+            # is in flight — exactly two model traces for the whole run.
+            T = 1 if all(n == 1 for _, n in plan.values()) else self.chunk
+            B = self.eng.slots
+            toks = np.zeros((B, T), np.int32)
+            lengths = np.zeros((B,), np.int32)
+            n_new = np.zeros((B,), np.int32)
+            for slot, (tk, n) in plan.items():
+                toks[slot, :n] = tk
+                lengths[slot] = self.active[slot].length
+                n_new[slot] = n
+            logits = self.eng.step_chunk(toks, lengths, n_new)
+            self._commit(plan, logits)
+            self.occupied_slot_steps += len(plan)
+        self.pool.observe_step()
+        self.steps += 1
+
+    def mean_latency_steps(self) -> float:
+        """Mean arrival-to-completion latency of finished requests, in
+        scheduler steps (queueing + prefill + decode + preemption time)."""
+        if not self.finished:
+            return 0.0
+        return float(np.mean([r.finished_step - r.arrival + 1
+                              for r in self.finished]))
+
+    def run(self) -> Dict[int, List[int]]:
+        while self.pending():
+            self.step()
+        return self.outputs

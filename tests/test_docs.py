@@ -1,0 +1,55 @@
+"""Generated-docs subsystem: docs/carry_in_tables.md must always match
+core/carry_ins.py (the CI staleness gate, kept in tier-1 so it can never
+rot locally either)."""
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _gen_docs():
+    spec = importlib.util.spec_from_file_location(
+        "gen_docs", ROOT / "scripts" / "gen_docs.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_carry_in_tables_doc_is_fresh():
+    gd = _gen_docs()
+    text = gd.render()
+    doc = ROOT / "docs" / "carry_in_tables.md"
+    assert doc.exists(), "run `python scripts/gen_docs.py`"
+    assert doc.read_text() == text, (
+        "docs/carry_in_tables.md is stale; run `python scripts/gen_docs.py`"
+    )
+
+
+def test_render_is_deterministic():
+    gd = _gen_docs()
+    assert gd.render() == gd.render()
+
+
+def test_check_mode_detects_staleness(tmp_path):
+    gd = _gen_docs()
+    out = tmp_path / "tables.md"
+    assert gd.main(["--out", str(out)]) == 0
+    assert gd.main(["--check", "--out", str(out)]) == 0
+    out.write_text(out.read_text() + "drift\n")
+    assert gd.main(["--check", "--out", str(out)]) == 1
+
+
+def test_every_cell_rendered():
+    """Every (format x op) section and every FACTORED_MUL entry appears."""
+    gd = _gen_docs()
+    text = gd.render()
+    for fmt, table_no in (("e5m2", 2), ("e4m3", 3)):
+        header = f"## {fmt} (paper Table {table_no})"
+        assert header in text
+        section = text.split(header, 1)[1].split("\n## ", 1)[0]
+        for op in ("mul", "square", "div", "recip", "sqrt", "rsqrt"):
+            assert f"### {op}" in section, (fmt, op)
+        assert f"### {fmt}" in text.split("## Factored mul forms", 1)[1]
+    # the corrected-vs-paper cells are present with their constants
+    assert text.count("| faithful | `1` |") >= 2  # e5m2 div, e4m3 sqrt/rsqrt

@@ -1,0 +1,222 @@
+"""Continuous-batching scheduler edge cases.
+
+Covers: token-level equivalence with the bucketed baseline (the acceptance
+contract), mid-flight joins vs solo decode, preemption under page
+exhaustion restoring bit-identical KV codes, zero-free-slot admission
+backpressure, and the page pool's spill/watermark accounting.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import serve
+from repro.serving import ContinuousScheduler, PagePool, Request
+
+
+def _engine(cfg, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_seq", 16)
+    kw.setdefault("cache_impl", "paged")
+    kw.setdefault("page_size", 4)
+    # Deterministic KV rounding by default: the equivalence tests compare
+    # runs whose step counts differ, and stochastic writes are keyed by the
+    # engine step counter — equality would then rest on quantization noise
+    # never flipping an argmax.  Tests that want the stochastic path
+    # (streaming, spill bit-identity) opt back in per test.
+    kw.setdefault("stochastic_kv", False)
+    return serve.Engine(cfg, **kw)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen2-0.5b", smoke=True, quant="fp8_w8kv8")
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler equivalence
+# --------------------------------------------------------------------------- #
+def test_continuous_matches_bucketed_tokens(cfg):
+    """Same queue, greedy sampling, deterministic KV rounding: the two
+    schedulers emit the same tokens.  (KV codes can still differ slightly
+    — chunked prefill sets each page's scale from its first token, the
+    batched splice from the whole page — but not enough to flip an
+    argmax at this scale.)"""
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, cfg.vocab, size=4 + 3 * (i % 2))
+             for i in range(5)]
+    outs = {}
+    for sched in ("bucketed", "continuous"):
+        eng = _engine(cfg)  # stochastic_kv off: equality must be exact
+        outs[sched], stats = serve.run(
+            eng, [q.copy() for q in queue], gen=6, quiet=True,
+            scheduler=sched,
+        )
+        assert stats["steps"] > 0
+        assert eng.pool.free_pages == eng.pool.num_pages - 1  # all released
+    assert outs["continuous"] == outs["bucketed"]
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b", "mamba2-780m"])
+def test_continuous_matches_bucketed_dense_entry_families(arch):
+    """Families with dense per-slot cache entries (MLA latents, SSM
+    states) exercise the masked sub-step's keep-old select."""
+    cfg = get_config(arch, smoke=True, quant="fp8_w8kv8")
+    rng = np.random.default_rng(1)
+    queue = [rng.integers(0, cfg.vocab, size=3 + 2 * (i % 2))
+             for i in range(3)]
+    outs = {}
+    for sched in ("bucketed", "continuous"):
+        eng = _engine(cfg, slots=2, max_seq=10)
+        outs[sched], _ = serve.run(eng, [q.copy() for q in queue], gen=4,
+                                   quiet=True, scheduler=sched, chunk=2)
+    assert outs["continuous"] == outs["bucketed"]
+
+
+def test_midflight_join_matches_solo_decode(cfg):
+    """A request joining while another slot is mid-decode produces the
+    same tokens as when it is served alone."""
+    rng = np.random.default_rng(2)
+    q0 = rng.integers(0, cfg.vocab, size=9)
+    q1 = rng.integers(0, cfg.vocab, size=5)
+    # joint: q1 arrives at step 4, well into q0's decode
+    eng = _engine(cfg, slots=2)
+    joint, _ = serve.run(eng, [q0.copy(), q1.copy()], gen=6, quiet=True,
+                         scheduler="continuous", arrivals=[0, 4])
+    # solo runs
+    for rid, q in enumerate([q0, q1]):
+        eng = _engine(cfg, slots=2)
+        solo, _ = serve.run(eng, [q.copy()], gen=6, quiet=True,
+                            scheduler="continuous")
+        assert joint[rid] == solo[0], rid
+
+
+# --------------------------------------------------------------------------- #
+# Preemption: spill/restore bit-identity
+# --------------------------------------------------------------------------- #
+def _paged_leaves(state):
+    """Flatten a spill record's paged entries to comparable arrays."""
+    out = []
+    for part in ("prefix", "blocks"):
+        for e in state[part]:
+            for name, v in e.items():
+                if isinstance(v, dict) and "kp" in v:
+                    out.append((part, name, v))
+    return out
+
+
+def test_preemption_restores_bit_identical_kv(cfg):
+    """Spill -> pool churn -> restore round-trips the KV page codes and
+    scales bitwise (they are copied verbatim, never re-quantized)."""
+    eng = _engine(cfg, slots=2, max_seq=16, num_pages=9, stochastic_kv=True)
+    # prefill 7 tokens into slot 0 via the mixed step
+    toks = np.zeros((2, 4), np.int32)
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab, size=7)
+    eng.pool.ensure_capacity(0, 7)
+    toks[0] = prompt[:4]
+    eng.step_chunk(toks, np.zeros(2, np.int32), np.array([4, 0], np.int32))
+    toks[0, :3] = prompt[4:]
+    eng.step_chunk(toks, np.array([4, 0], np.int32), np.array([3, 0], np.int32))
+
+    before = eng.preempt_slot(0)
+    assert before["n_pages"] == 2  # ceil(7/4)
+    assert eng.pool.free_pages == 8
+
+    # churn: another request claims and dirties the freed pages
+    eng.pool.ensure_capacity(1, 8)
+    other = np.random.default_rng(4).integers(0, cfg.vocab, size=(2, 4))
+    eng.step_chunk(other.astype(np.int32), np.zeros(2, np.int32),
+                   np.array([0, 4], np.int32))
+
+    eng.restore_slot(0, before)
+    after = eng.preempt_slot(0)
+    assert after["n_pages"] == before["n_pages"]
+    b_leaves = _paged_leaves(before["state"])
+    a_leaves = _paged_leaves(after["state"])
+    assert len(b_leaves) > 0
+    for (part, name, bv), (_, _, av) in zip(b_leaves, a_leaves):
+        for k in ("kp", "vp"):  # uint8 codes: exact
+            np.testing.assert_array_equal(bv[k], av[k], err_msg=f"{part}/{name}/{k}")
+        for k in ("ks", "vs"):  # f32 scales: exact copies too
+            np.testing.assert_array_equal(bv[k], av[k], err_msg=f"{part}/{name}/{k}")
+
+
+def test_preemption_under_page_exhaustion_preserves_outputs(cfg):
+    """A pool too small for all slots forces spills; outputs still match
+    the uncontended run token for token."""
+    rng = np.random.default_rng(5)
+    queue = [rng.integers(0, cfg.vocab, size=6) for _ in range(4)]
+    eng = _engine(cfg, slots=3, max_seq=16)
+    want, _ = serve.run(eng, [q.copy() for q in queue], gen=6, quiet=True,
+                        scheduler="continuous")
+    eng = _engine(cfg, slots=3, max_seq=16, num_pages=7)  # 6 usable pages
+    got, stats = serve.run(eng, [q.copy() for q in queue], gen=6, quiet=True,
+                           scheduler="continuous")
+    assert stats["preemptions"] > 0
+    assert got == want
+    assert eng.pool.free_pages == 6
+
+
+def test_single_oversized_request_raises(cfg):
+    eng = _engine(cfg, slots=2, max_seq=16, num_pages=3)  # 2 usable pages
+    q = [np.arange(10) % cfg.vocab]
+    with pytest.raises(RuntimeError, match="pages"):
+        serve.run(eng, q, gen=8, quiet=True, scheduler="continuous")
+
+
+# --------------------------------------------------------------------------- #
+# Admission backpressure
+# --------------------------------------------------------------------------- #
+def test_zero_free_slot_admission_backpressure(cfg):
+    """More requests than slots: admissions wait for evictions, the live
+    set never exceeds the slot count, and everything completes."""
+    rng = np.random.default_rng(6)
+    queue = [rng.integers(0, cfg.vocab, size=4) for _ in range(6)]
+    eng = _engine(cfg, slots=2)
+    sched = ContinuousScheduler(eng, chunk=4)
+    for i, p in enumerate(queue):
+        sched.add(Request(rid=i, prompt=p, gen=5))
+    max_active = 0
+    while sched.pending():
+        sched.step()
+        max_active = max(max_active, len(sched.active))
+        assert len(sched.active) <= eng.slots
+    assert max_active == 2
+    assert sorted(sched.outputs) == list(range(6))
+    assert all(len(v) == 5 for v in sched.outputs.values())
+
+
+def test_streaming_callback_sees_every_token(cfg):
+    rng = np.random.default_rng(7)
+    queue = [rng.integers(0, cfg.vocab, size=4) for _ in range(3)]
+    # stochastic KV writes on: streamed-vs-collected compares one run with
+    # itself, so the stochastic serving path gets scheduler coverage here
+    eng = _engine(cfg, slots=2, stochastic_kv=True)
+    seen = []
+    outs, _ = serve.run(eng, queue, gen=4, quiet=True,
+                        scheduler="continuous",
+                        on_token=lambda rid, tok, step: seen.append((rid, tok)))
+    streamed = {}
+    for rid, tok in seen:
+        streamed.setdefault(rid, []).append(tok)
+    assert streamed == outs
+
+
+# --------------------------------------------------------------------------- #
+# Page pool spill/watermark accounting
+# --------------------------------------------------------------------------- #
+def test_page_pool_spill_and_watermarks():
+    pool = PagePool(num_pages=8, page_size=4, slots=2, max_pages_per_slot=4)
+    pool.alloc(0, 3)
+    assert pool.peak_used_pages == 3
+    ids = pool.spill_slot(0)
+    assert len(ids) == 3 and pool.free_pages == 7 and pool.spills == 1
+    # spilled ids go to the back of the free list: a fresh alloc prefers
+    # other pages, so restore lands on different physical pages
+    got = pool.alloc(1, 3)
+    assert set(got).isdisjoint(ids)
+    back = pool.restore_slot(0, 3)
+    assert pool.restores == 1 and len(back) == 3
+    assert pool.peak_used_pages == 6
+    pool.observe_step()
+    assert pool.mean_utilization() == pytest.approx(6 / 7)
