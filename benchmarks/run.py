@@ -292,18 +292,18 @@ def serve_decode():
 
     rng = np.random.default_rng(0)
     queue = [rng.integers(0, 256, size=8) for _ in range(6)]
-    cells = [
-        ("fp8_w8kv8", "paged"),
-        ("fp8_w8kv8", "dense"),
-        ("none", "dense"),
+    cells = [  # named numerics policies (see repro.numerics)
+        ("serve_fp8_paged", "paged"),
+        ("serve_fp8_paged", "dense"),
+        ("train_bf16", "dense"),
     ]
-    for quant, impl in cells:
-        cfg = get_config("qwen2-0.5b", smoke=True, quant=quant)
+    for policy, impl in cells:
+        cfg = get_config("qwen2-0.5b", smoke=True, policy=policy)
         eng = serve.Engine(cfg, slots=3, max_seq=24, cache_impl=impl,
                            page_size=8)
         _, stats = serve.run(eng, [q.copy() for q in queue], gen=16,
                              quiet=True)
-        tag = f"serve_decode/qwen2-0.5b-smoke/{quant}/{impl}"
+        tag = f"serve_decode/qwen2-0.5b-smoke/{policy}/{impl}"
         emit(f"{tag}/tok_s", f"{stats['tok_s']:.2f}",
              f"steps={stats['steps']} slots=3 gen=16 cpu", "tok/s")
         emit(f"{tag}/cache_bytes_per_token",
@@ -336,7 +336,7 @@ def serve_continuous():
     arrivals = np.floor(
         np.cumsum(rng.exponential(2.0, size=len(plens)))
     ).astype(int)
-    cfg = get_config("qwen2-0.5b", smoke=True, quant="fp8_w8kv8")
+    cfg = get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
     results = {}
     outs = {}
     for sched in ("continuous", "bucketed"):

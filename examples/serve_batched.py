@@ -49,7 +49,14 @@ def main():
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--prompt-lens", default="8",
                     help="comma list of prompt lengths, cycled over requests")
-    ap.add_argument("--quant", default="fp8_w8kv8")
+    ap.add_argument("--policy", default=None,
+                    help="named numerics policy preset (default: "
+                         "serve_fp8_paged; see "
+                         "repro.numerics.available_policies())")
+    ap.add_argument("--quant", default=None,
+                    help="DEPRECATED alias for --policy (legacy flat "
+                         "quant flag, mapped through "
+                         "QuantConfig.to_policy())")
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "bucketed"])
     ap.add_argument("--cache-impl", default="paged", choices=["paged", "dense"])
@@ -68,11 +75,18 @@ def main():
         "--arch", args.arch, "--smoke",
         "--requests", str(args.requests), "--slots", str(args.slots),
         "--gen", str(args.gen), "--prompt-len", args.prompt_lens,
-        "--quant", args.quant, "--scheduler", args.scheduler,
+        "--scheduler", args.scheduler,
         "--cache-impl", args.cache_impl, "--page-size", str(args.page_size),
         "--pages", str(args.pages), "--chunk", str(args.chunk),
         "--arrival-rate", str(args.arrival_rate),
     ]
+    if args.quant is not None and args.policy is not None:
+        ap.error("--policy and the deprecated --quant are exclusive")
+    if args.quant is not None:
+        # deprecated alias: keeps working via QuantConfig.to_policy()
+        argv += ["--quant", args.quant]
+    else:
+        argv += ["--policy", args.policy or "serve_fp8_paged"]
     if args.stream:
         argv.append("--stream")
     serve.main(argv)

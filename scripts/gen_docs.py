@@ -32,6 +32,9 @@ from repro.core.carry_ins import CARRY_INS, FACTORED_MUL  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC = ROOT / "docs" / "carry_in_tables.md"
+NUMERICS_DOC = ROOT / "docs" / "numerics.md"
+PRESETS_BEGIN = "<!-- BEGIN GENERATED: policy-presets -->"
+PRESETS_END = "<!-- END GENERATED: policy-presets -->"
 
 MODES = ("rne", "rna", "rnz", "ru", "rd", "rz", "faithful")
 OPS = ("mul", "square", "div", "recip", "sqrt", "rsqrt")
@@ -253,31 +256,112 @@ def render() -> str:
     return "\n".join(lines).rstrip() + "\n"
 
 
+def render_preset_table() -> str:
+    """The registered numerics-policy presets as a markdown section."""
+    from repro.numerics import (
+        LEGACY_QUANT_PRESETS,
+        available_policies,
+        get_policy,
+    )
+
+    alias_of = {v: k for k, v in LEGACY_QUANT_PRESETS.items()}
+
+    def cell(op) -> str:
+        if not op.quantized:
+            return "—"
+        return f"`{op.fmt}/{op.mode}/{op.impl}`"
+
+    lines = [
+        PRESETS_BEGIN,
+        "",
+        "| preset | matmul (act) | weights | KV write | attn QK | "
+        "elementwise | static W | overrides | legacy `--quant` |",
+        "| --- | --- | --- | --- | --- | --- | --- | --- | --- |",
+    ]
+    for name in available_policies():
+        p = get_policy(name)
+        lines.append(
+            f"| `{name}` | {cell(p.matmul)} | {cell(p.weights)} | "
+            f"{cell(p.kv_write)} | {cell(p.attention_qk)} | "
+            f"{cell(p.elementwise)} | {'yes' if p.static_weights else 'no'} | "
+            f"{len(p.overrides) or '—'} | "
+            f"{('`' + alias_of[name] + '`') if name in alias_of else '—'} |"
+        )
+    lines += [
+        "",
+        "Cells are `fmt/mode/impl`; `—` means the op class stays in full",
+        "precision.  Regenerated by `python scripts/gen_docs.py` from",
+        "`src/repro/numerics/policy.py`.",
+        "",
+        PRESETS_END,
+    ]
+    return "\n".join(lines)
+
+
+def splice_presets(doc_text: str) -> str:
+    """Replace the generated section of docs/numerics.md in place.
+
+    Raises ValueError with an actionable message when the marker pair is
+    missing or malformed (e.g. mangled by a merge) — the generator cannot
+    place the table without them.
+    """
+    begin = doc_text.find(PRESETS_BEGIN)
+    end = doc_text.find(PRESETS_END)
+    if begin < 0 or end < 0 or end < begin:
+        raise ValueError(
+            f"{NUMERICS_DOC} is missing the marker pair\n  {PRESETS_BEGIN}\n"
+            f"  {PRESETS_END}\nrestore both markers (in that order) in the "
+            "Presets section, then rerun scripts/gen_docs.py"
+        )
+    end += len(PRESETS_END)
+    return doc_text[:begin] + render_preset_table() + doc_text[end:]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="(Re)generate docs/carry_in_tables.md from "
-                    "core/carry_ins.py",
+                    "core/carry_ins.py and the preset table in "
+                    "docs/numerics.md from repro.numerics",
     )
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 if the checked-in file is stale instead of "
-                         "rewriting it")
+                    help="exit 1 if the checked-in files are stale instead "
+                         "of rewriting them")
     ap.add_argument("--out", type=pathlib.Path, default=DOC)
     args = ap.parse_args(argv)
     text = render()
+    stale = []
     if args.check:
-        if not args.out.exists():
-            print(f"STALE: {args.out} does not exist; run "
-                  "`python scripts/gen_docs.py`")
+        if not args.out.exists() or args.out.read_text() != text:
+            stale.append(f"{args.out} (vs core/carry_ins.py)")
+        if not NUMERICS_DOC.exists():
+            stale.append(f"{NUMERICS_DOC} (missing)")
+        else:
+            cur = NUMERICS_DOC.read_text()
+            try:
+                if splice_presets(cur) != cur:
+                    stale.append(f"{NUMERICS_DOC} (vs repro.numerics presets)")
+            except ValueError as e:
+                print(e)
+                return 1
+        if stale:
+            for s in stale:
+                print(f"STALE: {s}; run `python scripts/gen_docs.py`")
             return 1
-        if args.out.read_text() != text:
-            print(f"STALE: {args.out} does not match core/carry_ins.py; "
-                  "run `python scripts/gen_docs.py`")
-            return 1
-        print(f"{args.out} is up to date")
+        print(f"{args.out} and {NUMERICS_DOC} are up to date")
         return 0
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(text)
     print(f"wrote {args.out}")
+    if not NUMERICS_DOC.exists():
+        print(f"ERROR: {NUMERICS_DOC} does not exist; restore it (with the "
+              f"{PRESETS_BEGIN} / {PRESETS_END} markers) from git")
+        return 1
+    try:
+        NUMERICS_DOC.write_text(splice_presets(NUMERICS_DOC.read_text()))
+    except ValueError as e:
+        print(e)
+        return 1
+    print(f"wrote {NUMERICS_DOC} (preset table)")
     return 0
 
 

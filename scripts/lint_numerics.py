@@ -1,0 +1,78 @@
+"""Lint: no raw numeric-format/rounding string kwargs under src/repro/models/.
+
+The numerics-policy refactor removed every ``fmt="e4m3"`` / ``mode="rne"``
+style kwarg from the model layers — formats, rounding modes and kernel
+impls are resolved from the :class:`repro.numerics.Policy` at each call
+site.  This lint keeps it that way: it fails when a *call site* under
+``src/repro/models/`` passes a numeric-format or rounding-mode string
+literal as a ``fmt=``/``mode=``/``impl=``/``act_fmt=``/``weight_fmt=``/
+``kv_fmt=`` kwarg.
+
+Function-definition default values (the low-level primitives like
+``_ste_qmatmul`` legitimately default ``mode="rne"``) and lines carrying a
+``# lint: legacy-quant-ok`` marker (the preserved QuantConfig shim bodies)
+are exempt.
+
+Usage::
+
+    python scripts/lint_numerics.py          # exit 1 on violations
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+MODELS = ROOT / "src" / "repro" / "models"
+
+NUMERIC_STRINGS = {
+    "e4m3", "e5m2",
+    "rne", "rna", "rnz", "rz", "ru", "rd", "faithful", "stochastic",
+    "lns", "lns_loop", "fused_dequant", "xla",
+}
+KWARGS = {"fmt", "mode", "impl", "act_fmt", "weight_fmt", "kv_fmt",
+          "matmul_impl", "w_fmt"}
+EXEMPT = "# lint: legacy-quant-ok"
+
+
+def violations() -> list:
+    out = []
+    for path in sorted(MODELS.glob("*.py")):
+        src = path.read_text()
+        lines = src.splitlines()
+        for node in ast.walk(ast.parse(src)):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg not in KWARGS:
+                    continue
+                v = kw.value
+                if not (isinstance(v, ast.Constant) and isinstance(v.value, str)
+                        and v.value in NUMERIC_STRINGS):
+                    continue
+                lineno = v.lineno
+                if EXEMPT in lines[lineno - 1]:
+                    continue
+                out.append((path.relative_to(ROOT), lineno,
+                            f"{kw.arg}={v.value!r}"))
+    return out
+
+
+def main() -> int:
+    bad = violations()
+    for path, lineno, line in bad:
+        print(f"{path}:{lineno}: raw numeric string kwarg: {line}")
+    if bad:
+        print(
+            f"\n{len(bad)} violation(s).  Model code must resolve formats/"
+            "modes/impls through repro.numerics (cfg.policy), not pass "
+            "string kwargs; see docs/numerics.md."
+        )
+        return 1
+    print("numerics lint: OK (no raw fmt=/mode= string kwargs in models/)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

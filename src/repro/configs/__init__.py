@@ -45,19 +45,47 @@ def shape_supported(arch: str, shape: str) -> tuple[bool, str]:
     return True, ""
 
 
-def get_config(arch: str, *, quant: str = "none", smoke: bool = False) -> ModelConfig:
+def legacy_quant_config(quant: str) -> QuantConfig:
+    """The historical ``--quant`` flag values as QuantConfig (deprecated:
+    these map through ``QuantConfig.to_policy()``; prefer the named
+    presets in :data:`repro.numerics.LEGACY_QUANT_PRESETS`)."""
+    if quant == "none":
+        return QuantConfig()
+    if quant == "fp8_w8":  # static weight-only FP8 (inference)
+        return QuantConfig(enabled=False, static_weights=True)
+    if quant == "fp8_w8kv8":  # weights + KV cache in FP8 (serving)
+        return QuantConfig(enabled=False, static_weights=True, kv_cache_fp8=True)
+    if quant == "fp8_w8_train":  # weight-only quantized training
+        return QuantConfig(enabled=True, act_quant=False)
+    impl = {"fp8_lns": "xla", "fp8_lns_pallas": "lns"}[quant]
+    return QuantConfig(enabled=True, matmul_impl=impl)
+
+
+def get_config(arch: str, *, quant: str = "none", smoke: bool = False,
+               policy=None) -> ModelConfig:
+    """Config lookup + numerics selection.
+
+    ``policy``: a :class:`repro.numerics.Policy`, a registered preset name
+    (``serve_fp8_paged``, ``train_fp8``, ...), or None.  ``quant`` is the
+    deprecated flat flag — it still works, mapping through
+    ``QuantConfig.to_policy()`` — but passing both is an error.
+    """
     cfg = CONFIGS[arch]
     if smoke:
         cfg = cfg.smoke()
+    if policy is not None:
+        if quant != "none":
+            raise ValueError(
+                f"pass either policy={policy!r} or the deprecated "
+                f"quant={quant!r}, not both"
+            )
+        from ..numerics import get_policy
+
+        pol = get_policy(policy)
+        # mirror into the legacy shim so REPRO_FORCE_LEGACY_QUANTCONFIG
+        # runs see an equivalent QuantConfig
+        return dataclasses.replace(cfg, numerics=pol,
+                                   quant=pol.to_quant_config())
     if quant != "none":
-        if quant == "fp8_w8":  # static weight-only FP8 (inference)
-            qc = QuantConfig(enabled=False, static_weights=True)
-        elif quant == "fp8_w8kv8":  # weights + KV cache in FP8 (serving)
-            qc = QuantConfig(enabled=False, static_weights=True, kv_cache_fp8=True)
-        elif quant == "fp8_w8_train":  # weight-only quantized training
-            qc = QuantConfig(enabled=True, act_quant=False)
-        else:
-            impl = {"fp8_lns": "xla", "fp8_lns_pallas": "lns"}[quant]
-            qc = QuantConfig(enabled=True, matmul_impl=impl)
-        cfg = dataclasses.replace(cfg, quant=qc)
+        cfg = dataclasses.replace(cfg, quant=legacy_quant_config(quant))
     return cfg

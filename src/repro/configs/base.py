@@ -7,14 +7,25 @@ None/0.  ``smoke()`` derives a reduced same-family config for CPU tests.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from ..numerics.policy import Policy, from_quant_config
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """The paper's technique as a first-class model feature."""
+    """Legacy flat quantization switches — a deprecation shim.
+
+    New code should use a :class:`repro.numerics.Policy` (the ``numerics``
+    field of :class:`ModelConfig`, or a named preset via
+    ``get_config(..., policy=...)``).  This class survives so old call
+    sites and flags keep working: :meth:`to_policy` maps it onto the
+    policy tree, and the mapping is pinned bit-identical to the historical
+    string-kwarg behavior by ``tests/test_numerics.py``.
+    """
 
     enabled: bool = False
     act_quant: bool = True  # quantize activations (False = weight-only)
@@ -28,6 +39,10 @@ class QuantConfig:
     static_weights: bool = False  # params stored as uint8 codes (inference)
     kv_cache_fp8: bool = False  # KV cache stored as E5M2 codes (decode)
     kv_fmt: str = "e5m2"
+
+    def to_policy(self) -> Policy:
+        """The equivalent :class:`repro.numerics.Policy` (cached)."""
+        return from_quant_config(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,8 +120,28 @@ class ModelConfig:
     # expensive ops, ~2-4x peak memory) — see EXPERIMENTS.md §Perf iter 4.
     remat_policy: str = "minimal"
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    # The numerics policy (repro.numerics.Policy).  None => derived from
+    # the legacy ``quant`` shim via QuantConfig.to_policy().
+    numerics: Optional[Policy] = None
 
     # ------------------------------------------------------------------ #
+    @property
+    def policy(self):
+        """The numerics policy model layers consume.
+
+        Returns a :class:`repro.numerics.Policy` — or, when
+        ``REPRO_FORCE_LEGACY_QUANTCONFIG=1`` (the deprecation-shim CI
+        job), the equivalent :class:`QuantConfig`, which routes the
+        layers through the preserved string-kwarg code paths.
+        """
+        if os.environ.get("REPRO_FORCE_LEGACY_QUANTCONFIG") == "1":
+            if self.numerics is not None:
+                return self.numerics.to_quant_config()
+            return self.quant
+        if self.numerics is not None:
+            return self.numerics
+        return self.quant.to_policy()
+
     @property
     def hd(self) -> int:
         return self.head_dim or (self.d_model // self.n_heads)

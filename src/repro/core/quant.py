@@ -117,13 +117,23 @@ def decode(codes, fmt: FP8Format | str):
 # --------------------------------------------------------------------------- #
 # Scaled tensors
 # --------------------------------------------------------------------------- #
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class QTensor:
     """FP8-quantized tensor: ``value ~= decode(codes) * scale``.
 
-    ``scale`` broadcasts against the decoded codes (per-tensor scalar or
-    per-channel vector).  ``fmt`` is static metadata.
+    The single quantized carrier everywhere: STE-quantized operands,
+    static (post-training) weight leaves inside params pytrees, and views
+    over the serving page pool all use this class — there is no parallel
+    ``{"codes", "scale"}`` dict representation.
+
+    ``scale`` broadcasts against the decoded codes (per-tensor scalar,
+    per-channel vector, or per-page column).  ``fmt`` is static pytree
+    metadata, so a jitted function retraces when the format changes and
+    ``jax.tree`` transforms (``jit``/``scan``/``vmap``) treat codes and
+    scale as ordinary leaves.  Key paths are exposed as ``"codes"`` /
+    ``"scale"`` dict keys, so path-based tooling (checkpoint addressing,
+    sharding rules) sees the same names the old dict carrier had.
     """
 
     codes: jnp.ndarray  # uint8
@@ -135,11 +145,21 @@ class QTensor:
         return self.codes.shape
 
     @property
+    def ndim(self):
+        return self.codes.ndim
+
+    @property
     def dtype(self):
         return jnp.uint8
 
     def dequantize(self):
         return decode(self.codes, self.fmt) * self.scale
+
+    def tree_flatten_with_keys(self):
+        return (
+            (jax.tree_util.DictKey("codes"), self.codes),
+            (jax.tree_util.DictKey("scale"), self.scale),
+        ), self.fmt
 
     def tree_flatten(self):
         return (self.codes, self.scale), self.fmt

@@ -33,7 +33,7 @@ lengths coexist in one decode batch.
 CPU smoke scale:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 6 --slots 2 --gen 16 --quant fp8_w8kv8 \
+      --requests 6 --slots 2 --gen 16 --policy serve_fp8_paged \
       --scheduler continuous --arrival-rate 0.5 --stream
 """
 from __future__ import annotations
@@ -47,9 +47,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import numerics
 from ..configs import get_config
 from ..models import Model
-from ..serving import ContinuousScheduler, PagePool, Request, write_prefill_pages
+from ..serving import ContinuousScheduler, PagePool, Request
 
 
 def cache_bytes(tree) -> int:
@@ -69,9 +70,10 @@ class Engine:
         self.params = self.model.init(jax.random.PRNGKey(rng_seed))
         self._prefill = jax.jit(self.model.prefill)
         self._splice_cache: Dict = {}
-        # stochastic-rounding KV writes only matter for FP8 caches
+        # stochastic-rounding KV writes only matter for FP8 caches; the
+        # policy's kv_write mode carries the default
         if stochastic_kv is None:
-            stochastic_kv = bool(cfg.quant.kv_cache_fp8)
+            stochastic_kv = numerics.kv_stochastic(cfg.policy)
         self._kv_key = (
             jax.random.PRNGKey(rng_seed + 17) if stochastic_kv else None
         )
@@ -127,7 +129,6 @@ class Engine:
             return self._splice_cache[key]
         cfg = self.cfg
         paged = self.cache_impl == "paged"
-        fmt = cfg.quant.kv_fmt if cfg.quant.kv_cache_fp8 else None
         npages = self.pool.pages_needed(plen_total) if paged else 0
 
         def splice_dense_leaf(big, new, slot_ids, stacked: bool):
@@ -146,13 +147,11 @@ class Engine:
             out = {}
             for name, cv in c_e.items():
                 if isinstance(cv, dict) and "kp" in cv:
-                    # paged GQA entry: quantize the prefill rows into pages
-                    mode = "stochastic" if keys is not None else cfg.quant.mode
-
+                    # paged GQA entry: quantize the prefill rows into
+                    # pages (fmt/mode resolved from the numerics policy)
                     def wr(pages, scales, src, pids, k):
-                        return write_prefill_pages(
-                            pages, scales, src, pids, fmt=fmt, mode=mode,
-                            key=k,
+                        return numerics.kv_write_prefill(
+                            cfg.policy, pages, scales, src, pids, key=k,
                         )
 
                     kp, ks = cv["kp"], cv["ks"]
@@ -587,7 +586,14 @@ def main(argv=None):
     )
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--quant", default="none")
+    ap.add_argument("--policy", default=None,
+                    help="named numerics policy preset (e.g. "
+                         "serve_fp8_paged, train_bf16; see "
+                         "repro.numerics.available_policies())")
+    ap.add_argument("--quant", default=None,
+                    help="DEPRECATED alias for --policy; legacy flat "
+                         "quant flag, mapped through "
+                         "QuantConfig.to_policy()")
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "bucketed"],
                     help="admission policy (default: continuous)")
@@ -613,7 +619,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke, quant=args.quant)
+    if args.policy is not None:
+        if args.quant not in (None, "none"):
+            ap.error("--policy and the deprecated --quant are exclusive")
+        cfg = get_config(args.arch, smoke=args.smoke, policy=args.policy)
+    else:
+        quant = args.quant or "none"
+        if quant != "none":
+            from ..numerics import LEGACY_QUANT_PRESETS
+
+            print(f"# --quant {quant} is deprecated; use --policy "
+                  f"{LEGACY_QUANT_PRESETS.get(quant, '<custom>')} "
+                  "(mapped through QuantConfig.to_policy())")
+        cfg = get_config(args.arch, smoke=args.smoke, quant=quant)
     if args.scheduler == "continuous" and (
         args.cache_impl == "dense" or cfg.family in ("vlm", "encdec")
     ):

@@ -48,10 +48,10 @@ def input_specs(cfg, shape_name: str) -> Tuple[str, Model, Tuple]:
 
     def make_params():
         params = model.init(jax.random.PRNGKey(0))
-        if cfg.quant.static_weights:
+        if cfg.policy.static_weights:  # attr shared by Policy + legacy shim
             from ..models.quantize import quantize_params
 
-            params = quantize_params(params, cfg.quant.weight_fmt)
+            params = quantize_params(params, cfg.policy)
         return params
 
     params = jax.eval_shape(make_params)

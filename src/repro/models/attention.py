@@ -15,8 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.quant import encode as fp8_encode
-from ..kernels.common import code_to_f32
+from .. import numerics
 from .layers import (
     chunked_attention,
     decode_attention,
@@ -29,16 +28,16 @@ from .layers import (
 
 
 def _kv_store(x, cfg):
-    """To cache representation (E5M2 codes when quant.kv_cache_fp8)."""
-    if cfg.quant.kv_cache_fp8:
-        return fp8_encode(x.astype(jnp.float32), cfg.quant.kv_fmt)
-    return x
+    """To cache representation (FP8 codes when the policy quantizes KV)."""
+    return numerics.kv_encode(x, cfg.policy)
 
 
 def _kv_load(x, cfg):
-    if cfg.quant.kv_cache_fp8:
-        return code_to_f32(x, cfg.quant.kv_fmt)
-    return x
+    return numerics.kv_decode(x, cfg.policy)
+
+
+def _kv_fp8(cfg) -> bool:
+    return numerics.kv_quantized(cfg.policy)
 
 
 def _init(rng, shape, dtype, scale=0.02):
@@ -68,12 +67,13 @@ def gqa_init(rng, cfg):
     return p
 
 
-def _gqa_qkv(p, x, cfg, positions, use_rope=True):
+def _gqa_qkv(p, x, cfg, positions, use_rope=True, site="blocks.*.attn"):
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = qlinear(x, p["wq"], cfg.quant, p.get("bq")).reshape(B, S, H, hd)
-    k = qlinear(x, p["wk"], cfg.quant, p.get("bk")).reshape(B, S, KV, hd)
-    v = qlinear(x, p["wv"], cfg.quant, p.get("bv")).reshape(B, S, KV, hd)
+    pol = cfg.policy
+    q = qlinear(x, p["wq"], pol, p.get("bq"), site=f"{site}.wq").reshape(B, S, H, hd)
+    k = qlinear(x, p["wk"], pol, p.get("bk"), site=f"{site}.wk").reshape(B, S, KV, hd)
+    v = qlinear(x, p["wv"], pol, p.get("bv"), site=f"{site}.wv").reshape(B, S, KV, hd)
     if cfg.qk_norm:
         q = qk_rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = qk_rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -84,9 +84,10 @@ def _gqa_qkv(p, x, cfg, positions, use_rope=True):
 
 
 def gqa_forward(p, x, cfg, *, is_global: bool, positions, cross_kv=None,
-                causal=True, use_rope=True, q_chunk=512, kv_chunk=1024):
+                causal=True, use_rope=True, q_chunk=512, kv_chunk=1024,
+                site="blocks.*.attn"):
     """Full-sequence attention. Returns (out, cache_entries)."""
-    q, k, v = _gqa_qkv(p, x, cfg, positions, use_rope)
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_rope, site=site)
     window = 0 if is_global else cfg.window
     if cross_kv is not None:  # enc-dec cross attention uses given k/v
         k, v = cross_kv
@@ -97,26 +98,26 @@ def gqa_forward(p, x, cfg, *, is_global: bool, positions, cross_kv=None,
                                 cap=cfg.attn_softcap,
                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
     B, S, _, _ = q.shape
-    y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.quant)
+    y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.policy, site=f"{site}.wo")
     return y, {"k": _kv_store(k, cfg), "v": _kv_store(v, cfg)}
 
 
 def gqa_decode(p, x, cfg, *, is_global: bool, cache, pos, cross_kv=None,
-               use_rope=True):
+               use_rope=True, site="blocks.*.attn"):
     """x: [B, 1, D]; cache k/v: [B, S, KV, hd]; pos: position index — a
     scalar, or a [B] vector of per-slot positions (serving batches)."""
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos[:, None]
-    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope)
+    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope, site=site)
     if cross_kv is not None:
         k, v = cross_kv
         out = decode_attention(q, k, v, pos=k.shape[1] - 1, cap=cfg.attn_softcap)
         new_cache = cache
     else:
-        k_c = _kv_store(k_new, cfg) if cfg.quant.kv_cache_fp8 else k_new.astype(cache["k"].dtype)
-        v_c = _kv_store(v_new, cfg) if cfg.quant.kv_cache_fp8 else v_new.astype(cache["v"].dtype)
+        k_c = _kv_store(k_new, cfg) if _kv_fp8(cfg) else k_new.astype(cache["k"].dtype)
+        v_c = _kv_store(v_new, cfg) if _kv_fp8(cfg) else v_new.astype(cache["v"].dtype)
         W = cache["k"].shape[1]
         window = 0 if is_global else cfg.window
         ring = bool(window) and W <= window  # ring buffer cache
@@ -128,12 +129,12 @@ def gqa_decode(p, x, cfg, *, is_global: bool, cache, pos, cross_kv=None,
                                pos=pos, window=0 if ring else window,
                                cap=cfg.attn_softcap, ring=ring)
         new_cache = {"k": k, "v": v}
-    y = qlinear(out.reshape(B, 1, -1), p["wo"], cfg.quant)
+    y = qlinear(out.reshape(B, 1, -1), p["wo"], cfg.policy, site=f"{site}.wo")
     return y, new_cache
 
 
 def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
-                     use_rope=True):
+                     use_rope=True, site="blocks.*.attn"):
     """GQA decode against the global page pool (serving path).
 
     x: [B, 1, D]; cache: this layer's page arrays {"kp", "vp", "ks", "vs"}
@@ -144,18 +145,15 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
     pow2 scale from the token's absmax), then runs the integer-domain paged
     decode attention.  Returns (y, new_cache).
     """
-    from ..kernels.paged_attention import paged_decode_attention
-    from ..serving.page_pool import write_token_page
-
     B = x.shape[0]
     KV = cfg.n_kv_heads
+    pol = cfg.policy
     lengths = jnp.asarray(paged["lengths"], jnp.int32)
     block_tables = jnp.asarray(paged["block_tables"], jnp.int32)
     page_size = paged["page_size"]
     positions = lengths[:, None]
-    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope)
+    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope, site=site)
 
-    fmt = cfg.quant.kv_fmt if cfg.quant.kv_cache_fp8 else None
     logical = lengths // page_size
     page_ids = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     rows = lengths - logical * page_size
@@ -166,18 +164,16 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
         page_ids = jnp.where(active, page_ids, 0)
     key = paged.get("key")
     kk, vk = (None, None) if key is None else tuple(jax.random.split(key))
-    mode = "stochastic" if key is not None else cfg.quant.mode
-    kp, ks = write_token_page(cache["kp"], cache["ks"], k_new[:, 0], page_ids,
-                              rows, fmt=fmt, mode=mode, key=kk)
-    vp, vs = write_token_page(cache["vp"], cache["vs"], v_new[:, 0], page_ids,
-                              rows, fmt=fmt, mode=mode, key=vk)
+    kp, ks = numerics.kv_write_token(pol, cache["kp"], cache["ks"],
+                                     k_new[:, 0], page_ids, rows, key=kk)
+    vp, vs = numerics.kv_write_token(pol, cache["vp"], cache["vs"],
+                                     v_new[:, 0], page_ids, rows, key=vk)
     window = 0 if is_global else cfg.window
-    out = paged_decode_attention(
-        q, kp, vp, ks, vs, block_tables, lengths + 1,
-        fmt=fmt, n_kv_heads=KV, mode=cfg.quant.mode,
-        window=window, cap=cfg.attn_softcap,
+    out = numerics.attention(
+        q, kp, vp, ks, vs, block_tables, lengths + 1, pol,
+        n_kv_heads=KV, window=window, cap=cfg.attn_softcap, site=site,
     )
-    y = qlinear(out.reshape(B, 1, -1), p["wo"], cfg.quant)
+    y = qlinear(out.reshape(B, 1, -1), p["wo"], pol, site=f"{site}.wo")
     return y, {"kp": kp, "vp": vp, "ks": ks, "vs": vs}
 
 
@@ -199,45 +195,47 @@ def mla_init(rng, cfg):
     }
 
 
-def _mla_q(p, x, cfg, positions):
+def _mla_q(p, x, cfg, positions, site="blocks.*.attn"):
     B, S, D = x.shape
     H = cfg.n_heads
     dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
-    q = qlinear(x, p["wq"], cfg.quant).reshape(B, S, H, dn + dr)
+    q = qlinear(x, p["wq"], cfg.policy, site=f"{site}.wq").reshape(B, S, H, dn + dr)
     q_nope, q_pe = q[..., :dn], q[..., dn:]
     q_pe = rope(q_pe, positions, cfg.rope_theta)
     return q_nope, q_pe
 
 
-def _mla_latent(p, x, cfg, positions):
+def _mla_latent(p, x, cfg, positions, site="blocks.*.attn"):
     B, S, D = x.shape
     L, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
-    dkv = qlinear(x, p["w_dkv"], cfg.quant)
+    dkv = qlinear(x, p["w_dkv"], cfg.policy, site=f"{site}.w_dkv")
     ckv = rms_norm(dkv[..., :L], p["kv_norm"], cfg.norm_eps)
     kpe = rope(dkv[..., L:].reshape(B, S, 1, dr), positions, cfg.rope_theta)
     return ckv, kpe.reshape(B, S, dr)
 
 
-def mla_forward(p, x, cfg, *, positions, q_chunk=512, kv_chunk=1024, **_):
+def mla_forward(p, x, cfg, *, positions, q_chunk=512, kv_chunk=1024,
+                site="blocks.*.attn", **_):
     B, S, D = x.shape
     H = cfg.n_heads
     dn, dr, dv, L = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
-    q_nope, q_pe = _mla_q(p, x, cfg, positions)
-    ckv, kpe = _mla_latent(p, x, cfg, positions)
+    pol = cfg.policy
+    q_nope, q_pe = _mla_q(p, x, cfg, positions, site=site)
+    ckv, kpe = _mla_latent(p, x, cfg, positions, site=site)
     # Expanded keys/values (train/prefill path)
-    k_nope = qlinear(ckv, p["w_uk"], cfg.quant).reshape(B, S, H, dn)
-    v = qlinear(ckv, p["w_uv"], cfg.quant).reshape(B, S, H, dv)
+    k_nope = qlinear(ckv, p["w_uk"], pol, site=f"{site}.w_uk").reshape(B, S, H, dn)
+    v = qlinear(ckv, p["w_uv"], pol, site=f"{site}.w_uv").reshape(B, S, H, dv)
     q = jnp.concatenate([q_nope, q_pe], axis=-1)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, dr))], axis=-1)
     out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
-    y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.quant)
+    y = qlinear(out.reshape(B, S, -1), p["wo"], pol, site=f"{site}.wo")
     # cache representation must match the decode path: FP8 codes when the
     # KV cache is quantized (a raw float here would be garbage-cast to
     # uint8 by the serving splice)
     return y, {"ckv": _kv_store(ckv, cfg), "kpe": _kv_store(kpe, cfg)}
 
 
-def mla_decode(p, x, cfg, *, cache, pos, **_):
+def mla_decode(p, x, cfg, *, cache, pos, site="blocks.*.attn", **_):
     """Absorbed-matrices decode: attention directly in the latent space.
 
     ``pos`` is a scalar or a [B] vector of per-slot positions."""
@@ -246,9 +244,9 @@ def mla_decode(p, x, cfg, *, cache, pos, **_):
     dn, dr, dv, L = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos[:, None]
-    q_nope, q_pe = _mla_q(p, x, cfg, positions)  # [B,1,H,dn],[B,1,H,dr]
-    ckv_new, kpe_new = _mla_latent(p, x, cfg, positions)
-    if cfg.quant.kv_cache_fp8:
+    q_nope, q_pe = _mla_q(p, x, cfg, positions, site=site)  # [B,1,H,dn],[B,1,H,dr]
+    ckv_new, kpe_new = _mla_latent(p, x, cfg, positions, site=site)
+    if _kv_fp8(cfg):
         ckv_new, kpe_new = _kv_store(ckv_new, cfg), _kv_store(kpe_new, cfg)
     else:
         ckv_new = ckv_new.astype(cache["ckv"].dtype)
@@ -262,7 +260,8 @@ def mla_decode(p, x, cfg, *, cache, pos, **_):
 
     from .quantize import resolve_weight
 
-    w_uk = resolve_weight(p["w_uk"], cfg.quant.weight_fmt, x.dtype).reshape(L, H, dn)
+    wfmt = numerics.weight_format(cfg.policy, f"{site}.w_uk")
+    w_uk = resolve_weight(p["w_uk"], wfmt, x.dtype).reshape(L, H, dn)
     # absorb: q_eff[b,h,l] = sum_d q_nope[b,h,d] * w_uk[l,h,d]
     q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
                        w_uk.astype(jnp.float32))
@@ -277,7 +276,10 @@ def mla_decode(p, x, cfg, *, cache, pos, **_):
     den = pattn.sum(-1, keepdims=True)
     lat = jnp.einsum("bhs,bsl->bhl", pattn / jnp.maximum(den, 1e-37),
                      ckv.astype(jnp.float32))
-    w_uv = resolve_weight(p["w_uv"], cfg.quant.weight_fmt, x.dtype).reshape(L, H, dv)
+    w_uv = resolve_weight(
+        p["w_uv"], numerics.weight_format(cfg.policy, f"{site}.w_uv"), x.dtype
+    ).reshape(L, H, dv)
     out = jnp.einsum("bhl,lhv->bhv", lat, w_uv.astype(jnp.float32))
-    y = qlinear(out.reshape(B, 1, H * dv).astype(x.dtype), p["wo"], cfg.quant)
+    y = qlinear(out.reshape(B, 1, H * dv).astype(x.dtype), p["wo"], cfg.policy,
+                site=f"{site}.wo")
     return y, cache

@@ -4,11 +4,13 @@ Everything is a pure function over parameter pytrees (dicts of jnp arrays);
 no framework objects.  All shapes are static => usable under jax.eval_shape
 for the 512-device dry-run.
 
-The paper's technique enters through :func:`qlinear`: when
-``cfg.quant.enabled`` every matmul quantizes activations (E5M2) and weights
-(E4M3) to FP8 codes and multiplies in the LNS integer domain (Pallas kernel
-on TPU, XLA dequant path for CPU lowering), with a straight-through
-estimator for gradients (standard FP8 training recipe).
+The paper's technique enters through :func:`qlinear`: when the numerics
+policy (``cfg.policy`` — see :mod:`repro.numerics`) quantizes matmuls,
+every linear quantizes activations and weights to FP8 codes and multiplies
+in the LNS integer domain (Pallas kernel on TPU, XLA dequant path for CPU
+lowering), with a straight-through estimator for gradients (standard FP8
+training recipe).  Formats, rounding modes and kernel impls are resolved
+per call site from the policy; no numeric strings are threaded here.
 """
 from __future__ import annotations
 
@@ -63,24 +65,33 @@ def softcap(x, cap: float):
 # --------------------------------------------------------------------------- #
 # Quantized / plain linear
 # --------------------------------------------------------------------------- #
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _ste_qmatmul(x2d, w, act_fmt, weight_fmt, impl, act_quant=True):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _ste_qmatmul(x2d, w, act_fmt, weight_fmt, impl, act_quant=True,
+                 mode="rne", accum="bf16"):
     qw = quantize(w, weight_fmt, axis=-1)
     if act_quant:
-        qx = quantize(x2d, act_fmt)
-        return kops.matmul_q(qx, qw, impl=impl)
+        qx = quantize(x2d, act_fmt, mode=mode)
+        return kops.matmul_q(
+            qx, qw, impl=impl, mode=mode,
+            compute_dtype=jnp.float32 if accum == "f32" else jnp.bfloat16,
+        )
     # weight-only: dequantize w, keep activations in compute dtype
     from .quantize import resolve_weight
 
-    wq = resolve_weight({"codes": qw.codes, "scale": qw.scale}, weight_fmt, x2d.dtype)
+    wq = resolve_weight(qw, dtype=x2d.dtype)
     return (x2d @ wq).astype(jnp.float32)
 
 
-def _ste_fwd(x2d, w, act_fmt, weight_fmt, impl, act_quant=True):
-    return _ste_qmatmul(x2d, w, act_fmt, weight_fmt, impl, act_quant), (x2d, w)
+def _ste_fwd(x2d, w, act_fmt, weight_fmt, impl, act_quant=True, mode="rne",
+             accum="bf16"):
+    return (
+        _ste_qmatmul(x2d, w, act_fmt, weight_fmt, impl, act_quant, mode,
+                     accum),
+        (x2d, w),
+    )
 
 
-def _ste_bwd(act_fmt, weight_fmt, impl, act_quant, res, g):
+def _ste_bwd(act_fmt, weight_fmt, impl, act_quant, mode, accum, res, g):
     x2d, w = res
     g = g.astype(w.dtype)
     return (g @ w.T).astype(x2d.dtype), (x2d.T @ g).astype(w.dtype)
@@ -89,23 +100,23 @@ def _ste_bwd(act_fmt, weight_fmt, impl, act_quant, res, g):
 _ste_qmatmul.defvjp(_ste_fwd, _ste_bwd)
 
 
-def qlinear(x, w, qcfg, b=None):
-    """[..., D_in] @ [D_in, D_out]; FP8-LNS path when qcfg.enabled.
+def _qlinear_legacy(x, w, qcfg, b=None):
+    """The historical QuantConfig string-kwarg body, preserved verbatim.
 
-    ``w`` may be a static-quantized {"codes", "scale"} dict (weight-only
-    FP8).  With activation quantization on, the stored codes feed the
-    quantized matmul directly (impl/blocks picked by the autotuner — see
-    models.quantize.static_qmatmul); otherwise the weight is decoded by
-    integer bit placement right before the matmul.  Either way only
-    1 byte/param crosses HBM.
+    Reached only when ``REPRO_FORCE_LEGACY_QUANTCONFIG=1`` routes
+    ``cfg.policy`` back to a QuantConfig (the deprecation-shim CI job);
+    pinned bit-identical to the policy path by ``tests/test_numerics.py``.
     """
-    if isinstance(w, dict) and "codes" in w:
+    from ..numerics import is_quantized_weight
+
+    if is_quantized_weight(w):
         if qcfg is not None and qcfg.enabled and qcfg.act_quant:
             from .quantize import static_qmatmul
 
             shape = x.shape
+            n_out = (w.shape if hasattr(w, "shape") else w["codes"].shape)[-1]
             y = static_qmatmul(x.reshape(-1, shape[-1]), w, qcfg)
-            y = y.reshape(*shape[:-1], w["codes"].shape[-1]).astype(x.dtype)
+            y = y.reshape(*shape[:-1], n_out).astype(x.dtype)
             if b is not None:
                 y = y + b
             return y
@@ -125,6 +136,25 @@ def qlinear(x, w, qcfg, b=None):
     return y
 
 
+def qlinear(x, w, pol, b=None, site: str = ""):
+    """[..., D_in] @ [D_in, D_out] under the numerics policy.
+
+    ``pol`` is a :class:`repro.numerics.Policy` (or the legacy
+    ``QuantConfig`` shim, or None).  ``w`` may be a static-quantized
+    :class:`QTensor` (weight-only FP8): with activation quantization on,
+    the stored codes feed the quantized matmul directly (impl/blocks
+    picked by the autotuner); otherwise the weight is decoded by integer
+    bit placement right before the matmul.  Either way only 1 byte/param
+    crosses HBM.  ``site`` names the call site for per-site policy
+    overrides (``"blocks.0.attn.wq"`` style).
+    """
+    from .. import numerics
+
+    if pol is not None and numerics.is_legacy_config(pol):
+        return _qlinear_legacy(x, w, pol, b)
+    return numerics.matmul(x, w, pol, site=site, bias=b)
+
+
 # --------------------------------------------------------------------------- #
 # Gated MLP
 # --------------------------------------------------------------------------- #
@@ -132,21 +162,29 @@ def _act(x, kind: str):
     return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x, approximate=True)
 
 
-def gated_mlp(x, p, qcfg, act_fn="silu"):
+def gated_mlp(x, p, pol, act_fn="silu", site: str = "ffn"):
     """SwiGLU/GeGLU: down( act(gate(x)) * up(x) ).
 
-    With qcfg.elementwise the gate*up product runs through the paper's FP8
-    LNS multiply (kernels.fp8_elementwise) instead of an f32 multiply.
+    When the policy quantizes elementwise ops, the gate*up product runs
+    through the paper's FP8 LNS multiply (kernels.fp8_elementwise)
+    instead of an f32 multiply.
     """
-    g = _act(qlinear(x, p["w_gate"], qcfg), act_fn)
-    u = qlinear(x, p["w_up"], qcfg)
-    if qcfg is not None and qcfg.enabled and qcfg.elementwise:
-        qg = quantize(g, qcfg.act_fmt)
-        qu = quantize(u, qcfg.act_fmt)
-        h = kops.elementwise_q("mul", qg, qu, mode=qcfg.mode).dequantize().astype(x.dtype)
+    from .. import numerics
+
+    g = _act(qlinear(x, p["w_gate"], pol, site=f"{site}.w_gate"), act_fn)
+    u = qlinear(x, p["w_up"], pol, site=f"{site}.w_up")
+    if pol is not None and numerics.is_legacy_config(pol):
+        # preserved QuantConfig string path (REPRO_FORCE_LEGACY_QUANTCONFIG)
+        if pol.enabled and pol.elementwise:
+            qg = quantize(g, pol.act_fmt)
+            qu = quantize(u, pol.act_fmt)
+            h = kops.elementwise_q("mul", qg, qu, mode=pol.mode)
+            h = h.dequantize().astype(x.dtype)
+        else:
+            h = g * u
     else:
-        h = g * u
-    return qlinear(h, p["w_down"], qcfg)
+        h = numerics.elementwise("mul", g, u, pol, site=f"{site}.gate_up")
+    return qlinear(h, p["w_down"], pol, site=f"{site}.w_down")
 
 
 # --------------------------------------------------------------------------- #

@@ -53,13 +53,14 @@ def mamba2_init(rng, cfg):
     }
 
 
-def _proj(p, x, cfg):
+def _proj(p, x, cfg, site="blocks.*.mamba"):
     """x [B,S,D] -> z [B,S,di], xc/Bc/Cc (pre-conv), dt_raw [B,S,nh]."""
-    z = qlinear(x, p["w_z"], cfg.quant)
-    xc = qlinear(x, p["w_x"], cfg.quant)
-    Bc = qlinear(x, p["w_B"], cfg.quant)
-    Cc = qlinear(x, p["w_C"], cfg.quant)
-    dtr = qlinear(x, p["w_dt"], cfg.quant)
+    pol = cfg.policy
+    z = qlinear(x, p["w_z"], pol, site=f"{site}.w_z")
+    xc = qlinear(x, p["w_x"], pol, site=f"{site}.w_x")
+    Bc = qlinear(x, p["w_B"], pol, site=f"{site}.w_B")
+    Cc = qlinear(x, p["w_C"], pol, site=f"{site}.w_C")
+    dtr = qlinear(x, p["w_dt"], pol, site=f"{site}.w_dt")
     return z, xc, Bc, Cc, dtr
 
 
@@ -126,7 +127,8 @@ def ssd_forward(p, x, cfg, chunk: int = 128) -> Tuple[jnp.ndarray, dict]:
 
     y = (y_diag + y_off + xs * p["Dskip"][None, None, None, :, None]).reshape(B, S, di)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
-    y = qlinear(y.astype(x.dtype), p["out_proj"], cfg.quant)
+    y = qlinear(y.astype(x.dtype), p["out_proj"], cfg.policy,
+                site="blocks.*.mamba.out_proj")
 
     # conv cache: last (w-1) *pre-activation* conv inputs, concatenated
     conv_cache = jnp.concatenate(
@@ -170,5 +172,6 @@ def ssd_decode(p, x, cfg, cache) -> Tuple[jnp.ndarray, dict]:
     y = jnp.einsum("bn,bhpn->bhp", Cm, state) + xs * p["Dskip"][None, :, None]
     y = y.reshape(B, 1, di)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"], cfg.norm_eps)
-    y = qlinear(y.astype(x.dtype), p["out_proj"], cfg.quant)
+    y = qlinear(y.astype(x.dtype), p["out_proj"], cfg.policy,
+                site="blocks.*.mamba.out_proj")
     return y, {"conv": hist[:, 1:, :], "state": state}

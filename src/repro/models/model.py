@@ -88,9 +88,12 @@ class Model:
         cfg = self.cfg
         w = params.get("unembed")
         if w is not None:
+            from .. import numerics
             from .quantize import resolve_weight
 
-            w = resolve_weight(w, cfg.quant.weight_fmt, x.dtype)
+            w = resolve_weight(
+                w, numerics.weight_format(cfg.policy, "unembed"), x.dtype
+            )
         logits = (x @ w if w is not None else x @ params["embed"].T).astype(jnp.float32)
         logits = hint(logits, "logits") if logits.ndim == 3 else logits
         logits = softcap(logits, cfg.final_softcap)
@@ -134,10 +137,12 @@ class Model:
     def _run_prefix(self, params, x, positions, mode, enc_out):
         caches = []
         aux = dict(AUX0)
-        for p, s in zip(params.get("prefix", ()), self.prefix_specs):
+        for i, (p, s) in enumerate(
+            zip(params.get("prefix", ()), self.prefix_specs)
+        ):
             x, c, aux = sublayer_forward(
                 p, s, x, self.cfg, positions=positions, mode=mode,
-                enc_out=enc_out, aux=aux,
+                enc_out=enc_out, aux=aux, site=f"prefix.{i}",
             )
             caches.append(c)
         return x, tuple(caches), aux
@@ -188,10 +193,11 @@ class Model:
             x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None]
         aux = dict(AUX0)
         new_prefix = []
-        for p, s, c in zip(
+        for i, (p, s, c) in enumerate(zip(
             params.get("prefix", ()), self.prefix_specs, cache.get("prefix", ())
-        ):
-            x, nc, aux = sublayer_decode(p, s, x, cfg, cache=c, pos=pos, aux=aux)
+        )):
+            x, nc, aux = sublayer_decode(p, s, x, cfg, cache=c, pos=pos,
+                                         aux=aux, site=f"prefix.{i}")
             new_prefix.append(nc)
         x, new_caches, _ = stack_decode(
             params["blocks"], cache["blocks"], x, cfg, self.pattern, pos=pos
@@ -247,7 +253,7 @@ class Model:
             pkey = None if key is None else jax.random.fold_in(key, 1 + i)
             x, nc, aux = sublayer_decode(
                 p, s, x, cfg, cache=c, pos=lengths, aux=aux,
-                paged=dict(paged, key=pkey),
+                paged=dict(paged, key=pkey), site=f"prefix.{i}",
             )
             new_prefix.append(nc)
         bkey = None if key is None else jax.random.fold_in(key, 0)
@@ -313,8 +319,10 @@ class Model:
 
     # ------------------------------------------------------------------ #
     def _entry_cache(self, spec: SubSpec, B: int, S: int):
+        from .. import numerics
+
         cfg = self.cfg
-        dt = jnp.uint8 if cfg.quant.kv_cache_fp8 else cfg.pdtype
+        dt = jnp.uint8 if numerics.kv_quantized(cfg.policy) else cfg.pdtype
         e: Dict[str, Any] = {}
         if spec.mixer == "attn":
             if cfg.attn_impl == "mla":
@@ -358,10 +366,12 @@ class Model:
                            num_pages: int, page_size: int):
         """Per-layer paged entry: GQA KV lives in the global page pool;
         MLA/SSM/cross entries keep their dense per-slot representation."""
+        from .. import numerics
+
         cfg = self.cfg
         e = self._entry_cache(spec, B, S)
         if spec.mixer == "attn" and cfg.attn_impl != "mla":
-            dt = jnp.uint8 if cfg.quant.kv_cache_fp8 else cfg.pdtype
+            dt = jnp.uint8 if numerics.kv_quantized(cfg.policy) else cfg.pdtype
             pshape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
             e["self"] = {
                 "kp": jnp.zeros(pshape, dt),

@@ -40,17 +40,37 @@ def moe_init(rng, cfg):
     return p
 
 
-def _expert_mm(buf, w, qcfg):
-    """[E, C, Din] @ [E, Din, Dout] -> [E, C, Dout], optionally FP8-LNS."""
-    if isinstance(w, dict) and "codes" in w:
+def _expert_mm(buf, w, pol, site=""):
+    """[E, C, Din] @ [E, Din, Dout] -> [E, C, Dout], optionally FP8-LNS.
+
+    ``pol`` is a numerics Policy (or the legacy QuantConfig shim).  The
+    per-expert matmuls vmap the same policy-resolved path ``qlinear``
+    uses, so MoE experts and dense layers share one numerics surface.
+    (The preserved QuantConfig branch keeps one historical quirk verbatim:
+    it quantized expert activations whenever ``enabled``, ignoring
+    ``act_quant`` — the policy path honors the per-site matmul format.)
+    """
+    from .. import numerics
+
+    if numerics.is_quantized_weight(w):
         from .quantize import resolve_weight
 
-        w = resolve_weight(w, qcfg.weight_fmt if qcfg else "e4m3", buf.dtype)
-    if qcfg is not None and qcfg.enabled:
-        from .layers import _ste_qmatmul
+        fmt = numerics.weight_format(pol, site) or "e4m3"
+        w = resolve_weight(w, fmt, buf.dtype)
+    if pol is not None and numerics.is_legacy_config(pol):
+        # preserved QuantConfig string path (REPRO_FORCE_LEGACY_QUANTCONFIG)
+        if pol.enabled:
+            from .layers import _ste_qmatmul
 
+            return jax.vmap(
+                lambda a, b: _ste_qmatmul(a, b, pol.act_fmt, pol.weight_fmt,
+                                          pol.matmul_impl)
+            )(buf, w).astype(buf.dtype)
+        return jnp.einsum("ecd,edf->ecf", buf, w)
+    ppol = numerics.as_policy(pol)
+    if ppol is not None and ppol.ste_weights:
         return jax.vmap(
-            lambda a, b: _ste_qmatmul(a, b, qcfg.act_fmt, qcfg.weight_fmt, qcfg.matmul_impl)
+            lambda a, b: numerics.matmul(a, b, ppol, site=site)
         )(buf, w).astype(buf.dtype)
     return jnp.einsum("ecd,edf->ecf", buf, w)
 
@@ -60,7 +80,7 @@ def capacity(T: int, k: int, E: int, factor: float) -> int:
     return max(8, -(-c // 8) * 8)  # multiple of 8, at least 8
 
 
-def moe_ffn(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+def moe_ffn(p, x, cfg, site="blocks.*.ffn") -> Tuple[jnp.ndarray, dict]:
     """x: [B, S, D] -> (out [B, S, D], aux losses).
 
     Dispatch strategies (cfg.moe_dispatch):
@@ -78,12 +98,13 @@ def moe_ffn(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
 
         state = _ctx.get()
         if state is not None:
-            return _moe_ffn_shard_map(p, x, cfg, *state)
-        return _moe_ffn_grouped(p, x, cfg)
-    return _moe_ffn_global(p, x, cfg)
+            return _moe_ffn_shard_map(p, x, cfg, *state, site=site)
+        return _moe_ffn_grouped(p, x, cfg, site=site)
+    return _moe_ffn_global(p, x, cfg, site=site)
 
 
-def _moe_ffn_shard_map(p, x, cfg, mesh, hint_specs) -> Tuple[jnp.ndarray, dict]:
+def _moe_ffn_shard_map(p, x, cfg, mesh, hint_specs,
+                       site="blocks.*.ffn") -> Tuple[jnp.ndarray, dict]:
     """Shard-local dispatch via shard_map (no SPMD guesswork).
 
     Tokens stay exactly where the activation sharding puts them; each device
@@ -164,9 +185,10 @@ def _moe_ffn_shard_map(p, x, cfg, mesh, hint_specs) -> Tuple[jnp.ndarray, dict]:
         buf = jnp.zeros((e_loc, C, D), x_loc.dtype).at[local_eid, rank_c].add(
             xf[tok] * keep[:, None].astype(x_loc.dtype)
         )
-        h = _act(_expert_mm(buf, p_loc["w_gate"], cfg.quant), cfg.act_fn)
-        h = h * _expert_mm(buf, p_loc["w_up"], cfg.quant)
-        y = _expert_mm(h, p_loc["w_down"], cfg.quant)
+        h = _act(_expert_mm(buf, p_loc["w_gate"], cfg.policy,
+                            f"{site}.w_gate"), cfg.act_fn)
+        h = h * _expert_mm(buf, p_loc["w_up"], cfg.policy, f"{site}.w_up")
+        y = _expert_mm(h, p_loc["w_down"], cfg.policy, f"{site}.w_down")
 
         g_sorted = gate_vals.reshape(-1)[order] * keep
         out = jnp.zeros((Tg, D), jnp.float32).at[tok].add(
@@ -188,11 +210,12 @@ def _moe_ffn_shard_map(p, x, cfg, mesh, hint_specs) -> Tuple[jnp.ndarray, dict]:
     if "shared" in p:
         from .layers import gated_mlp
 
-        out = out + gated_mlp(x, p["shared"], cfg.quant, cfg.act_fn)
+        out = out + gated_mlp(x, p["shared"], cfg.policy, cfg.act_fn,
+                              site=f"{site}.shared")
     return out, aux
 
 
-def _moe_ffn_grouped(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+def _moe_ffn_grouped(p, x, cfg, site="blocks.*.ffn") -> Tuple[jnp.ndarray, dict]:
     from ..parallel.hints import hint_meta
 
     B, S, D = x.shape
@@ -201,7 +224,7 @@ def _moe_ffn_grouped(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
     xg = x.reshape(B * g2, S // g2, D)
 
     def one_group(xr):  # [Tg, D]
-        return _dispatch_group(p, xr, cfg)
+        return _dispatch_group(p, xr, cfg, site=site)
 
     out, aux = jax.vmap(one_group)(xg)
     out = out.reshape(B, S, D)
@@ -210,11 +233,12 @@ def _moe_ffn_grouped(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
     if "shared" in p:
         from .layers import gated_mlp
 
-        out = out + gated_mlp(x, p["shared"], cfg.quant, cfg.act_fn)
+        out = out + gated_mlp(x, p["shared"], cfg.policy, cfg.act_fn,
+                              site=f"{site}.shared")
     return out, aux
 
 
-def _dispatch_group(p, xf, cfg) -> Tuple[jnp.ndarray, dict]:
+def _dispatch_group(p, xf, cfg, site="blocks.*.ffn") -> Tuple[jnp.ndarray, dict]:
     """Sorted-capacity dispatch over one token group [Tg, D] (local)."""
     Tg, D = xf.shape
     E, k = cfg.n_experts, cfg.top_k
@@ -242,9 +266,10 @@ def _dispatch_group(p, xf, cfg) -> Tuple[jnp.ndarray, dict]:
     buf = jnp.zeros((E, C, D), xf.dtype).at[eid, rank_c].add(
         xf[tok] * keep[:, None].astype(xf.dtype)
     )
-    h = _act(_expert_mm(buf, p["w_gate"], cfg.quant), cfg.act_fn)
-    h = h * _expert_mm(buf, p["w_up"], cfg.quant)
-    y = _expert_mm(h, p["w_down"], cfg.quant)
+    h = _act(_expert_mm(buf, p["w_gate"], cfg.policy, f"{site}.w_gate"),
+             cfg.act_fn)
+    h = h * _expert_mm(buf, p["w_up"], cfg.policy, f"{site}.w_up")
+    y = _expert_mm(h, p["w_down"], cfg.policy, f"{site}.w_down")
 
     g_sorted = gate_vals.reshape(-1)[order] * keep
     out = jnp.zeros((Tg, D), jnp.float32).at[tok].add(
@@ -253,7 +278,7 @@ def _dispatch_group(p, xf, cfg) -> Tuple[jnp.ndarray, dict]:
     return out.astype(xf.dtype), aux
 
 
-def _moe_ffn_global(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
+def _moe_ffn_global(p, x, cfg, site="blocks.*.ffn") -> Tuple[jnp.ndarray, dict]:
     B, S, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
     T = B * S
@@ -286,9 +311,10 @@ def _moe_ffn_global(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
     vals = xf[tok] * keep[:, None].astype(x.dtype)
     buf = buf.at[eid, rank_c].add(vals)
 
-    h = _act(_expert_mm(buf, p["w_gate"], cfg.quant), cfg.act_fn)
-    h = h * _expert_mm(buf, p["w_up"], cfg.quant)
-    y = _expert_mm(h, p["w_down"], cfg.quant)  # [E, C, D]
+    h = _act(_expert_mm(buf, p["w_gate"], cfg.policy, f"{site}.w_gate"),
+             cfg.act_fn)
+    h = h * _expert_mm(buf, p["w_up"], cfg.policy, f"{site}.w_up")
+    y = _expert_mm(h, p["w_down"], cfg.policy, f"{site}.w_down")  # [E, C, D]
 
     g_sorted = gate_vals.reshape(-1)[order] * keep
     out = jnp.zeros((T, D), jnp.float32)
@@ -298,6 +324,7 @@ def _moe_ffn_global(p, x, cfg) -> Tuple[jnp.ndarray, dict]:
     if "shared" in p:
         from .layers import gated_mlp
 
-        out = out + gated_mlp(x, p["shared"], cfg.quant, cfg.act_fn).reshape(T, D)
+        out = out + gated_mlp(x, p["shared"], cfg.policy, cfg.act_fn,
+                              site=f"{site}.shared").reshape(T, D)
 
     return out.reshape(B, S, D), {"moe_lb": aux_lb, "moe_z": aux_z}

@@ -1,10 +1,11 @@
 """Static (post-training) FP8 weight quantization.
 
 Converts eligible matmul weights in a params pytree to
-``{"codes": uint8, "scale": f32}`` — weights then cross HBM at 1 byte/param
-and are decoded to compute dtype by the bit-placement dequant
-(kernels.common.code_to_f32, a handful of integer VPU ops: the paper's
-cheap-integer-arithmetic thesis applied at the system level).
+:class:`repro.core.quant.QTensor` leaves (uint8 codes + f32 scale) —
+weights then cross HBM at 1 byte/param and are decoded to compute dtype by
+the bit-placement dequant (kernels.common.code_to_f32, a handful of
+integer VPU ops: the paper's cheap-integer-arithmetic thesis applied at
+the system level).
 
 This is the deployment mode for memory-bound serving: decode steps read
 every active weight once per token, so weight bytes ~halve the dominant
@@ -12,14 +13,20 @@ roofline term (EXPERIMENTS.md §Perf hillclimb C).
 
 Stacked block weights get a per-block scale (axis 0); everything else is
 per-tensor.  Embedding tables stay float (gather path), norms/biases stay
-float (tiny).
+float (tiny).  The per-site weight format comes from the numerics policy
+(``weights`` op class + any ``weights`` overrides keyed by the parameter
+path, e.g. ``"blocks.*.attn.wq"``).
 """
 from __future__ import annotations
+
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from ..core.quant import quantize
+from ..core.quant import QTensor, quantize
+from ..numerics import as_policy, is_legacy_config
+from ..numerics.policy import Policy
 
 QUANT_WEIGHT_NAMES = {
     "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_uk", "w_uv",
@@ -28,52 +35,86 @@ QUANT_WEIGHT_NAMES = {
 }
 
 
-def quantize_params(params, fmt: str = "e4m3"):
-    """Replace eligible weight leaves with {"codes", "scale"} dicts."""
+def _path_site(path) -> str:
+    return ".".join(
+        str(getattr(e, "key", getattr(e, "idx", e))) for e in path
+    )
+
+
+def quantize_params(params, policy: Union[Policy, str, None] = None):
+    """Replace eligible weight leaves with :class:`QTensor` carriers.
+
+    ``policy``: a :class:`Policy` (per-site formats via its ``weights``
+    op class + overrides), a bare format string (legacy shorthand,
+    per-tensor E4M3 by default), or None (E4M3 everywhere).
+    """
+    if isinstance(policy, str):  # legacy fmt-string shorthand
+        fmt, pol = policy, None
+    else:
+        pol = as_policy(policy)
+        fmt = pol.weights.fmt if pol is not None and pol.weight_quant else "e4m3"
 
     def walk(path, leaf):
         keys = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
         name = keys[-1]
         if name in QUANT_WEIGHT_NAMES and leaf.ndim >= 2:
+            site_fmt = fmt
+            if pol is not None and pol.weight_quant:
+                site_fmt = pol.resolve("weights", _path_site(path)).fmt
             stacked = keys[0] in ("blocks", "enc_blocks")
-            q = quantize(leaf, fmt, axis=0 if stacked else None)
-            scale = q.scale
-            return {"codes": q.codes, "scale": jnp.asarray(scale, jnp.float32)}
+            return quantize(leaf, site_fmt, axis=0 if stacked else None)
         return leaf
 
     return jax.tree_util.tree_map_with_path(walk, params)
 
 
-def resolve_weight(w, fmt: str = "e4m3", dtype=jnp.bfloat16):
-    """Dequantize a static-quantized weight dict (no-op for plain arrays)."""
+def resolve_weight(w, fmt: Optional[str] = None, dtype=jnp.bfloat16):
+    """Dequantize a static-quantized weight (no-op for plain arrays).
+
+    ``w``: a :class:`QTensor` (its own ``fmt`` is authoritative), a legacy
+    ``{"codes", "scale"}`` dict (``fmt`` names the format, default E4M3 —
+    kept for old checkpoints), or a plain array.
+    """
+    if isinstance(w, QTensor):
+        from ..kernels.common import code_to_f32
+
+        return (code_to_f32(w.codes, w.fmt) * w.scale).astype(dtype)
     if isinstance(w, dict) and "codes" in w:
         from ..kernels.common import code_to_f32
 
-        return (code_to_f32(w["codes"], fmt) * w["scale"]).astype(dtype)
+        return (code_to_f32(w["codes"], fmt or "e4m3") * w["scale"]).astype(dtype)
     return w
 
 
-def static_qmatmul(x2d, w, qcfg):
-    """[M, K] @ static-quantized weight dict -> f32 [M, N], codes end-to-end.
+def static_qmatmul(x2d, w, pol, site: str = ""):
+    """[M, K] @ static-quantized weight -> f32 [M, N], codes end-to-end.
 
-    The fast path for quantized matmuls against static weights: activations
-    are quantized to codes and multiplied against the *stored* weight codes
-    by ``kernels.ops.matmul_q`` (impl and Pallas blocks resolved by the
-    autotuner), so the weight never takes a decode->f32->re-encode round
-    trip and only 1 byte/param crosses HBM.
+    The fast path for quantized matmuls against static weights:
+    activations are quantized to codes and multiplied against the *stored*
+    weight codes by ``kernels.ops.matmul_q`` (impl and Pallas blocks
+    resolved by the autotuner), so the weight never takes a
+    decode->f32->re-encode round trip and only 1 byte/param crosses HBM.
 
-    The paper's LNS product is single-format: when ``matmul_impl`` pins
-    ``lns``/``lns_loop`` and the stored weight format differs from
-    ``act_fmt``, activations are quantized in the weight's format instead.
+    ``pol`` may be a :class:`Policy` or the legacy ``QuantConfig`` (the
+    preserved string-kwarg path).  The paper's LNS product is
+    single-format: when the impl pins ``lns``/``lns_loop`` and the stored
+    weight format differs from the activation format, activations are
+    quantized in the weight's format instead.
     """
-    from ..core.quant import QTensor, quantize
+    from ..core.quant import quantize as _quantize
     from ..kernels import ops as kops
+    from ..numerics.api import static_matmul_2d
+    from ..numerics.policy import SINGLE_FORMAT_IMPLS
 
-    w_fmt = qcfg.weight_fmt
-    act_fmt = qcfg.act_fmt
-    if qcfg.matmul_impl in ("lns", "lns_loop") and act_fmt != w_fmt:
-        act_fmt = w_fmt
-    qx = quantize(x2d, act_fmt, mode=qcfg.mode)
-    qw = QTensor(codes=w["codes"], scale=jnp.asarray(w["scale"], jnp.float32),
-                 fmt=w_fmt)
-    return kops.matmul_q(qx, qw, impl=qcfg.matmul_impl, mode=qcfg.mode)
+    if not isinstance(w, QTensor):  # legacy dict carrier
+        w_fmt = (pol.weight_fmt if is_legacy_config(pol)
+                 else (pol.weights.fmt if pol is not None else "e4m3"))
+        w = QTensor(codes=w["codes"],
+                    scale=jnp.asarray(w["scale"], jnp.float32), fmt=w_fmt)
+    if is_legacy_config(pol):  # QuantConfig string threading, preserved
+        act_fmt = pol.act_fmt
+        if pol.matmul_impl in SINGLE_FORMAT_IMPLS and act_fmt != w.fmt:
+            act_fmt = w.fmt
+        qx = _quantize(x2d, act_fmt, mode=pol.mode)
+        return kops.matmul_q(qx, w, impl=pol.matmul_impl, mode=pol.mode)
+    return static_matmul_2d(x2d, w, pol, site)

@@ -110,17 +110,23 @@ def _use_rope(cfg) -> bool:
 
 
 def sublayer_forward(p, spec: SubSpec, x, cfg, *, positions, mode,
-                     enc_out=None, aux=None):
-    """Full-sequence sublayer.  Returns (x, cache_entry, aux)."""
+                     enc_out=None, aux=None, site="blocks.*"):
+    """Full-sequence sublayer.  Returns (x, cache_entry, aux).
+
+    ``site`` names this sublayer for per-site numerics-policy overrides
+    (e.g. ``"blocks.0"`` — the index within the scan pattern is static,
+    the scanned block index is the wildcard)."""
     cache: Dict[str, Any] = {}
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if spec.mixer == "attn":
         if cfg.attn_impl == "mla":
-            out, c = mla_forward(p["attn"], h, cfg, positions=positions)
+            out, c = mla_forward(p["attn"], h, cfg, positions=positions,
+                                 site=f"{site}.attn")
         else:
             out, c = gqa_forward(
                 p["attn"], h, cfg, is_global=spec.attn_global,
                 positions=positions, causal=spec.causal, use_rope=_use_rope(cfg),
+                site=f"{site}.attn",
             )
         cache["self"] = c
     else:
@@ -141,7 +147,7 @@ def sublayer_forward(p, spec: SubSpec, x, cfg, *, positions, mode,
         )
         out, _ = gqa_forward(
             p["cross"], h, cfg, is_global=True, positions=positions,
-            cross_kv=(xk, xv), use_rope=False,
+            cross_kv=(xk, xv), use_rope=False, site=f"{site}.cross",
         )
         cache["xk"], cache["xv"] = xk, xv
         x = x + out
@@ -149,11 +155,12 @@ def sublayer_forward(p, spec: SubSpec, x, cfg, *, positions, mode,
     if spec.ffn != "none":
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
         if spec.ffn == "moe":
-            out, moe_aux = moe_ffn(p["ffn"], h, cfg)
+            out, moe_aux = moe_ffn(p["ffn"], h, cfg, site=f"{site}.ffn")
             if aux is not None:
                 aux = {k: aux[k] + moe_aux[k] for k in aux}
         else:
-            out = gated_mlp(h, p["ffn"], cfg.quant, cfg.act_fn)
+            out = gated_mlp(h, p["ffn"], cfg.policy, cfg.act_fn,
+                            site=f"{site}.ffn")
         if cfg.sandwich_norm:
             out = rms_norm(out, p["ln2_post"], cfg.norm_eps)
         x = x + out
@@ -161,7 +168,7 @@ def sublayer_forward(p, spec: SubSpec, x, cfg, *, positions, mode,
 
 
 def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None,
-                    paged=None):
+                    paged=None, site="blocks.*"):
     """Single-token sublayer.  Returns (x, new_cache, aux).
 
     ``pos`` is a scalar or per-slot [B] vector.  ``paged`` is the serving
@@ -173,16 +180,19 @@ def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None,
     new_cache: Dict[str, Any] = {}
     if spec.mixer == "attn":
         if cfg.attn_impl == "mla":
-            out, c = mla_decode(p["attn"], h, cfg, cache=cache["self"], pos=pos)
+            out, c = mla_decode(p["attn"], h, cfg, cache=cache["self"],
+                                pos=pos, site=f"{site}.attn")
         elif paged is not None and "kp" in cache["self"]:
             out, c = gqa_decode_paged(
                 p["attn"], h, cfg, is_global=spec.attn_global,
                 cache=cache["self"], paged=paged, use_rope=_use_rope(cfg),
+                site=f"{site}.attn",
             )
         else:
             out, c = gqa_decode(
                 p["attn"], h, cfg, is_global=spec.attn_global,
                 cache=cache["self"], pos=pos, use_rope=_use_rope(cfg),
+                site=f"{site}.attn",
             )
     else:
         out, c = ssd_decode(p["mamba"], h, cfg, cache["self"])
@@ -209,6 +219,7 @@ def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None,
         out, _ = gqa_decode(
             p["cross"], h, cfg, is_global=True, cache=None, pos=pos,
             cross_kv=(cache["xk"], cache["xv"]), use_rope=False,
+            site=f"{site}.cross",
         )
         new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
         x = x + out
@@ -216,11 +227,12 @@ def sublayer_decode(p, spec: SubSpec, x, cfg, *, cache, pos, aux=None,
     if spec.ffn != "none":
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
         if spec.ffn == "moe":
-            out, moe_aux = moe_ffn(p["ffn"], h, cfg)
+            out, moe_aux = moe_ffn(p["ffn"], h, cfg, site=f"{site}.ffn")
             if aux is not None:
                 aux = {k: aux[k] + moe_aux[k] for k in aux}
         else:
-            out = gated_mlp(h, p["ffn"], cfg.quant, cfg.act_fn)
+            out = gated_mlp(h, p["ffn"], cfg.policy, cfg.act_fn,
+                            site=f"{site}.ffn")
         if cfg.sandwich_norm:
             out = rms_norm(out, p["ln2_post"], cfg.norm_eps)
         x = x + out
@@ -255,7 +267,7 @@ def stack_forward(blocks, x, cfg, pattern, *, positions, mode,
         for j, spec in enumerate(pattern):
             x, c, aux = sublayer_forward(
                 bp[j], spec, x, cfg, positions=positions, mode=mode,
-                enc_out=enc_out, aux=aux,
+                enc_out=enc_out, aux=aux, site=f"blocks.{j}",
             )
             caches.append(c)
         return (x, aux), tuple(caches) if want_cache else None
@@ -295,7 +307,7 @@ def stack_decode(blocks, caches, x, cfg, pattern, *, pos, paged=None):
                 bpaged = dict(paged, key=bkj)
             x, c, aux = sublayer_decode(
                 bp[j], spec, x, cfg, cache=bc[j], pos=pos, aux=aux,
-                paged=bpaged,
+                paged=bpaged, site=f"blocks.{j}",
             )
             new_cs.append(c)
         return (x, aux), tuple(new_cs)

@@ -1,0 +1,83 @@
+"""Unified numerics-policy layer: one `Policy` tree, one `QTensor` carrier.
+
+The paper's thesis is that a single integer datapath serves many
+(format, rounding-mode) pairs.  This package makes that pair — plus the
+kernel implementation and accumulation dtype — a first-class, per-op-class
+*policy* instead of loose ``fmt=``/``mode=``/``impl=`` string kwargs
+threaded hand-to-hand through models, kernels and serving:
+
+  * :mod:`repro.numerics.policy` — the frozen :class:`Policy` tree (one
+    :class:`OpPolicy` per op class: matmul, static weights, attention
+    QK/PV, KV-cache write/rescale, elementwise), glob-style per-site
+    overrides, a registry of named presets (``train_bf16``,
+    ``serve_fp8_paged``, ``weight_only_e4m3``, ...) and JSON round-trip
+    serialization.
+  * :mod:`repro.numerics.api` — the functional surface model code calls
+    (:func:`matmul`, :func:`attention`, :func:`kv_encode`,
+    :func:`elementwise`, ...).  Each entry point resolves
+    ``(fmt, mode, impl, accum)`` from the policy (+ ``kernels.autotune``
+    for ``impl="auto"``), so call sites never pass numeric strings.
+
+The legacy :class:`repro.configs.base.QuantConfig` survives as a thin
+deprecation shim: ``QuantConfig.to_policy()`` maps it onto a
+:class:`Policy`, and setting ``REPRO_FORCE_LEGACY_QUANTCONFIG=1`` forces
+the model layers back onto the preserved string-kwarg code path (pinned
+bit-identical to the policy path by ``tests/test_numerics.py``).
+"""
+from .policy import (
+    LEGACY_QUANT_PRESETS,
+    OP_CLASSES,
+    OpPolicy,
+    Override,
+    Policy,
+    available_policies,
+    from_quant_config,
+    get_policy,
+    register_policy,
+)
+from .api import (
+    as_policy,
+    dequantize_weight,
+    is_quantized_weight,
+    attention,
+    elementwise,
+    force_legacy,
+    is_legacy_config,
+    kv_decode,
+    kv_encode,
+    kv_format,
+    kv_quantized,
+    kv_stochastic,
+    kv_write_prefill,
+    kv_write_token,
+    matmul,
+    weight_format,
+)
+
+__all__ = [
+    "OP_CLASSES",
+    "LEGACY_QUANT_PRESETS",
+    "OpPolicy",
+    "Override",
+    "Policy",
+    "available_policies",
+    "from_quant_config",
+    "get_policy",
+    "register_policy",
+    "as_policy",
+    "attention",
+    "dequantize_weight",
+    "is_quantized_weight",
+    "elementwise",
+    "force_legacy",
+    "is_legacy_config",
+    "kv_decode",
+    "kv_encode",
+    "kv_format",
+    "kv_quantized",
+    "kv_stochastic",
+    "kv_write_prefill",
+    "kv_write_token",
+    "matmul",
+    "weight_format",
+]

@@ -9,6 +9,7 @@ machine; the ``Engine`` in ``launch.serve`` executes its decisions
 from .page_pool import (
     PagePool,
     encode_kv,
+    page_qtensor,
     pow2_page_scale,
     rescale_codes,
     write_prefill_pages,
@@ -21,6 +22,7 @@ __all__ = [
     "PagePool",
     "Request",
     "encode_kv",
+    "page_qtensor",
     "pow2_page_scale",
     "rescale_codes",
     "write_prefill_pages",

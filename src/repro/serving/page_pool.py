@@ -37,11 +37,12 @@ import numpy as np
 from ..core.carry_ins import supports_stochastic
 from ..core.formats import FORMATS
 from ..core.lns import lns_op
-from ..core.quant import encode
+from ..core.quant import QTensor, encode
 from ..kernels.common import code_to_f32
 
 __all__ = [
     "PagePool",
+    "page_qtensor",
     "pow2_page_scale",
     "encode_kv",
     "rescale_codes",
@@ -162,6 +163,23 @@ class PagePool:
 # --------------------------------------------------------------------------- #
 # Device-side helpers (pure jnp)
 # --------------------------------------------------------------------------- #
+def page_qtensor(pages, scales, fmt) -> QTensor:
+    """:class:`QTensor` view of a page array (zero-copy metadata wrap).
+
+    pages: [P, page, KV, hd] uint8 codes; scales: [P] f32 per-page scales.
+    The scale is reshaped to broadcast per page, so ``view.dequantize()``
+    is the float content of the whole pool — serving code, tests and
+    offline tools share the training stack's one decode path instead of
+    hand-multiplying codes and scales.
+    """
+    if isinstance(fmt, str):
+        fmt = FORMATS[fmt]
+    scale = jnp.asarray(scales, jnp.float32).reshape(
+        (-1,) + (1,) * (pages.ndim - 1)
+    )
+    return QTensor(codes=pages, scale=scale, fmt=fmt.name)
+
+
 def pow2_page_scale(amax, fmt):
     """Power-of-two scale mapping ``amax`` just inside the format's range.
 

@@ -113,20 +113,25 @@ def test_roofline_cell_analysis_shape():
 # Static weight quantization
 # --------------------------------------------------------------------------- #
 def test_quantize_params_roundtrip_accuracy():
+    from repro.core.quant import QTensor
     from repro.models.quantize import QUANT_WEIGHT_NAMES, quantize_params, resolve_weight
 
     cfg = get_config("qwen2-0.5b", smoke=True)
     m = Model(cfg, max_seq=16)
     params = m.init(jax.random.PRNGKey(0))
     qp = quantize_params(params)
-    # stacked weights got per-block scales
+    # stacked weights got per-block scales, carried as QTensor leaves
     w = qp["blocks"][0]["attn"]["wq"]
-    assert set(w) == {"codes", "scale"} and w["codes"].dtype == jnp.uint8
-    assert w["scale"].shape[0] == w["codes"].shape[0]  # per-block
+    assert isinstance(w, QTensor) and w.codes.dtype == jnp.uint8
+    assert w.fmt == "e4m3"
+    assert w.scale.shape[0] == w.codes.shape[0]  # per-block
     orig = params["blocks"][0]["attn"]["wq"].astype(jnp.float32)
-    deq = resolve_weight(w, "e4m3", jnp.float32)
+    deq = resolve_weight(w, dtype=jnp.float32)
     err = jnp.abs(deq - orig).max() / jnp.abs(orig).max()
     assert float(err) < 2 ** (-3)  # within one E4M3 ulp of the absmax scale
+    # the legacy dict carrier still resolves (old checkpoints)
+    legacy = {"codes": w.codes, "scale": w.scale}
+    assert jnp.array_equal(resolve_weight(legacy, "e4m3", jnp.float32), deq)
 
 
 def test_static_quant_decode_close_to_bf16():
