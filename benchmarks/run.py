@@ -33,6 +33,9 @@ Framework:
   serve_continuous        continuous vs bucketed scheduler on a
                           mixed-length Poisson request stream (tok/s, slot
                           occupancy, preemptions) -> BENCH_3.json.
+  serve_prefix            prefix cache on vs off on a shared-system-prompt
+                          Poisson stream (prefill tokens saved, hit rate,
+                          tok/s, output equality) -> BENCH_4.json.
   roofline_summary        key roofline numbers from the dry-run artifacts.
 """
 import json
@@ -373,6 +376,65 @@ def serve_continuous():
          "token-level equivalence of the two schedulers (greedy)")
 
 
+def serve_prefix():
+    """Prefix caching on a shared-system-prompt Poisson stream.
+
+    The dominant production workload: every request shares a long system
+    prompt and differs only in a short user suffix.  With the prefix
+    cache on, the first request prefills and publishes the shared pages;
+    every later request maps them read-only (refcounted, copy-on-write
+    for the partial last page) and prefills only its suffix.  Same
+    engine, same continuous scheduler, same stochastic FP8 KV writes —
+    the cache changes only *which* tokens are prefilled, and because KV
+    rounding is position-addressed the outputs are bit-identical
+    (asserted below as outputs_equal).  The PR-5 acceptance run writes
+    BENCH_4.json: ``python benchmarks/run.py serve_prefix
+    --json=BENCH_4.json``.
+    """
+    from repro.configs import get_config
+    from repro.launch import serve
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, size=24)  # the common system prompt
+    suffixes = [4, 6, 5, 7, 4, 6, 5, 4]
+    gen = 8
+    queue = [np.concatenate([shared, rng.integers(0, 256, size=s)])
+             for s in suffixes]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(3.0, size=len(queue)))
+    ).astype(int)
+    cfg = get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
+    results, outs = {}, {}
+    for pc in (True, False):
+        eng = serve.Engine(cfg, slots=3, max_seq=48, cache_impl="paged",
+                           page_size=8, prefix_cache=pc)
+        outs[pc], stats = serve.run(
+            eng, [q.copy() for q in queue], gen=gen, quiet=True,
+            scheduler="continuous", arrivals=arrivals, chunk=8,
+        )
+        results[pc] = stats
+        tag = f"serve_prefix/qwen2-0.5b-smoke/{'on' if pc else 'off'}"
+        emit(f"{tag}/prefill_tokens", stats["prefill_tokens"],
+             f"prompt tokens actually prefilled; "
+             f"cache_hits={stats['prefix_hit_tokens']} tokens", "tokens")
+        emit(f"{tag}/tok_s", f"{stats['tok_s']:.2f}",
+             f"steps={stats['steps']} slots=3 gen={gen} cpu", "tok/s")
+        if pc:
+            emit(f"{tag}/hit_rate", f"{stats['prefix']['hit_rate']:.3f}",
+                 f"page-chunk lookups={stats['prefix']['lookups']} "
+                 f"hits={stats['prefix']['hits']} "
+                 f"cow={stats['prefix']['cow_copies']}", "x")
+    on, off = results[True], results[False]
+    emit("serve_prefix/prefill_token_reduction",
+         f"{off['prefill_tokens'] / max(on['prefill_tokens'], 1):.2f}",
+         f"cache-off prefill tokens ({off['prefill_tokens']}) over "
+         f"cache-on ({on['prefill_tokens']}), shared 24-token system "
+         "prompt x 8 requests", "x")
+    emit("serve_prefix/outputs_equal", int(outs[True] == outs[False]),
+         "bit-identical token streams, stochastic KV rounding ON "
+         "(position-addressed write keys)")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -397,6 +459,7 @@ BENCHES = {
     "flash_attention_kernel": flash_attention_kernel,
     "serve_decode": serve_decode,
     "serve_continuous": serve_continuous,
+    "serve_prefix": serve_prefix,
     "roofline_summary": roofline_summary,
 }
 

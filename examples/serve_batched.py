@@ -2,10 +2,10 @@
 
 Run:  PYTHONPATH=src python examples/serve_batched.py \
           [--arch qwen2-0.5b] [--requests 6] [--slots 3] [--gen 12] \
-          [--prompt-lens 4,12,8] [--quant fp8_w8kv8] \
+          [--prompt-lens 4,12,8] [--shared-prefix 16] [--quant fp8_w8kv8] \
           [--scheduler continuous|bucketed] [--cache-impl paged|dense] \
-          [--page-size 8] [--pages N] [--chunk 4] [--arrival-rate 0.5] \
-          [--stream]
+          [--prefix-cache on|off] [--page-size 8] [--pages N] [--chunk 4] \
+          [--arrival-rate 0.5] [--stream]
 """
 import pathlib
 import sys
@@ -34,6 +34,11 @@ examples:
   # same stream through the bucketed baseline for comparison
   python examples/serve_batched.py --requests 8 --slots 3 --gen 12 \\
       --prompt-lens 4,12,20 --arrival-rate 0.5 --scheduler bucketed
+  # shared-system-prompt stream with ref-counted prefix caching: later
+  # requests reuse the shared prompt's KV pages, prefilling only the tail
+  python examples/serve_batched.py --requests 8 --slots 3 --gen 12 \\
+      --prompt-lens 4,6 --shared-prefix 16 --prefix-cache on \\
+      --arrival-rate 0.5
 """
 
 
@@ -49,6 +54,12 @@ def main():
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--prompt-lens", default="8",
                     help="comma list of prompt lengths, cycled over requests")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared tokens to every prompt "
+                         "(a common system prompt)")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="ref-counted prefix caching over the page pool "
+                         "(paged pure-GQA caches)")
     ap.add_argument("--policy", default=None,
                     help="named numerics policy preset (default: "
                          "serve_fp8_paged; see "
@@ -75,8 +86,11 @@ def main():
         "--arch", args.arch, "--smoke",
         "--requests", str(args.requests), "--slots", str(args.slots),
         "--gen", str(args.gen), "--prompt-len", args.prompt_lens,
+        "--shared-prefix", str(args.shared_prefix),
         "--scheduler", args.scheduler,
-        "--cache-impl", args.cache_impl, "--page-size", str(args.page_size),
+        "--cache-impl", args.cache_impl,
+        "--prefix-cache", args.prefix_cache,
+        "--page-size", str(args.page_size),
         "--pages", str(args.pages), "--chunk", str(args.chunk),
         "--arrival-rate", str(args.arrival_rate),
     ]

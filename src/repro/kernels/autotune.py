@@ -5,7 +5,12 @@ Every kernel entry point (``lns_matmul``, ``fp8_elementwise``,
 not pin one.  Answers come from, in order:
 
   1. the on-disk cache (one JSON file, keyed by kernel kind, backend,
-     problem shape, format, impl and mode),
+     **device model** (``jax.devices()[0].device_kind`` — a tiling
+     measured on a v5e must not be replayed on a v4 sharing the cache
+     file), problem shape, format, impl and mode; entries written before
+     the device-kind field existed are read only where measurement is
+     impossible — on a measurable backend they are ignored and the config
+     is re-measured under the device-kind key),
   2. live measurement over a candidate grid — only when the backend can
      actually run compiled Pallas (TPU/GPU) or when forced,
   3. shape-aware heuristic defaults (always used in interpret mode, i.e.
@@ -81,6 +86,30 @@ def clear_memory_cache() -> None:
     global _CACHE
     with _LOCK:
         _CACHE = None
+
+
+def _device_kind() -> str:
+    """Sanitized device model for cache keys (e.g. ``TPU_v5_lite``)."""
+    try:
+        kind = str(jax.devices()[0].device_kind)
+    except Exception:
+        return "unknown"
+    return kind.strip().replace("|", "/").replace(" ", "_") or "unknown"
+
+
+def _lookup(key: str, legacy_key: str, interpret: bool):
+    """Cached entry under the device-kind key.  Entries in the
+    pre-device-kind key format are consulted ONLY when live measurement
+    is impossible (interpret mode / measurement off) — there a legacy
+    entry beats a blind heuristic.  On a measurable backend a legacy hit
+    is ignored so the config gets re-measured on THIS device model and
+    stored under the device-kind key; replaying it would be exactly the
+    cross-device contamination the key change exists to prevent."""
+    cache = _load()
+    hit = cache.get(key)
+    if hit is not None or _should_measure(interpret):
+        return hit
+    return cache.get(legacy_key)
 
 
 def _should_measure(interpret: bool) -> bool:
@@ -169,8 +198,9 @@ def matmul_blocks(
         return blocks if impl == "lns" else blocks[:3]
 
     backend = jax.default_backend()
-    key = f"matmul|{backend}|i{int(interpret)}|{M}x{N}x{K}|{fmt}|{impl}|{mode}"
-    cached = _load().get(key)
+    tail = f"i{int(interpret)}|{M}x{N}x{K}|{fmt}|{impl}|{mode}"
+    key = f"matmul|{backend}|{_device_kind()}|{tail}"
+    cached = _lookup(key, f"matmul|{backend}|{tail}", interpret)
     if cached is not None:
         return _norm(cached)
     if not _should_measure(interpret):
@@ -205,8 +235,9 @@ def choose_matmul_impl(
     mixed = w_fmt is not None and w_fmt != fmt
     if mixed:
         return "fused_dequant"  # the LNS product is single-format
-    key = f"impl|{backend}|i{int(interpret)}|{M}x{N}x{K}|{fmt}|{mode}"
-    cached = _load().get(key)
+    tail = f"i{int(interpret)}|{M}x{N}x{K}|{fmt}|{mode}"
+    key = f"impl|{backend}|{_device_kind()}|{tail}"
+    cached = _lookup(key, f"impl|{backend}|{tail}", interpret)
     if cached is not None:
         return cached
     if not _should_measure(interpret):
@@ -244,8 +275,9 @@ def elementwise_block_rows(
     """Row-block size for the (rows, 128)-tiled elementwise kernel."""
     rows = -(-n_elements // 128)
     backend = jax.default_backend()
-    key = f"elemwise|{backend}|i{int(interpret)}|r{rows}|{fmt}|{op}|{mode}"
-    cached = _load().get(key)
+    tail = f"i{int(interpret)}|r{rows}|{fmt}|{op}|{mode}"
+    key = f"elemwise|{backend}|{_device_kind()}|{tail}"
+    cached = _lookup(key, f"elemwise|{backend}|{tail}", interpret)
     if cached is not None:
         return int(cached)
     if not _should_measure(interpret):
@@ -275,8 +307,9 @@ def flash_blocks(
 ) -> Tuple[int, int]:
     """(bq, bk) tiling for ``flash_attention``."""
     backend = jax.default_backend()
-    key = f"flash|{backend}|i{int(interpret)}|{Sq}x{Sk}x{hd}x{dv}"
-    cached = _load().get(key)
+    tail = f"i{int(interpret)}|{Sq}x{Sk}x{hd}x{dv}"
+    key = f"flash|{backend}|{_device_kind()}|{tail}"
+    cached = _lookup(key, f"flash|{backend}|{tail}", interpret)
     if cached is not None:
         return tuple(cached)
     # mirror the kernel's historical guard: shrink to the sequence length

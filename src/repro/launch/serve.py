@@ -30,6 +30,15 @@ Both backends drive every slot at its own position (a per-slot position
 vector through ``Model.decode_step``), so slots with different history
 lengths coexist in one decode batch.
 
+``--prefix-cache on`` (paged pure-GQA caches) enables **ref-counted
+prefix caching**: full prompt pages are published in a token-chunk-hash
+index, requests sharing a prompt prefix map the cached pages read-only
+and prefill only the uncached tail, the partial last page is cloned
+copy-on-write when the cache covers a whole prompt, and unreferenced
+cached pages are LRU-evicted under allocation pressure.  KV stochastic
+rounding is position-addressed, so a cache hit is bit-identical to
+recomputing the prefix (``docs/serving.md``).
+
 CPU smoke scale:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
@@ -39,9 +48,9 @@ CPU smoke scale:
 from __future__ import annotations
 
 import argparse
-import functools
+import hashlib
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,10 +67,24 @@ def cache_bytes(tree) -> int:
 
 
 class Engine:
+    # Disjoint PRNG streams for the two KV-write paths.  The seed engine
+    # derived both from the same stream — ``fold_in(key, 1_000_003 +
+    # step)`` for the prefill splice vs ``fold_in(key, step)`` for token
+    # writes — so a long-running engine replayed prefill keys at decode
+    # step ``1_000_003 + s``, biasing KV rounding.  Streams now diverge at
+    # the first fold (tests/test_prefix_cache.py pins disjointness).
+    # Stream 0 (token writes) is deliberately NOT folded with the engine
+    # step: the attention layer folds each slot's *write position* in, so
+    # page codes are a pure function of (tokens, position, layer) — the
+    # property the prefix cache's bit-identity rests on.
+    _STREAM_TOKEN_WRITE = 0
+    _STREAM_PREFILL_SPLICE = 1
+
     def __init__(self, cfg, *, slots: int, max_seq: int,
                  cache_impl: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None, rng_seed: int = 0,
-                 stochastic_kv: Optional[bool] = None):
+                 stochastic_kv: Optional[bool] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.model = Model(cfg, max_seq=max_seq)
         self.max_seq = max_seq
@@ -77,7 +100,32 @@ class Engine:
         self._kv_key = (
             jax.random.PRNGKey(rng_seed + 17) if stochastic_kv else None
         )
+        self._token_key = (
+            None if self._kv_key is None
+            else jax.random.fold_in(self._kv_key, self._STREAM_TOKEN_WRITE)
+        )
         self._step = 0
+
+        self.prefix_cache = bool(prefix_cache)
+        self._slot_hash: Dict[int, List[str]] = {}
+        self._slot_registered: Dict[int, int] = {}
+        self._cow_fn = None
+        if self.prefix_cache:
+            if cache_impl != "paged":
+                raise ValueError("prefix caching needs cache_impl='paged'")
+            if not self.prefix_cache_supported(cfg):
+                raise ValueError(
+                    f"prefix caching needs a pure-GQA paged KV cache; "
+                    f"{cfg.name!r} (family={cfg.family!r}, "
+                    f"attn_impl={cfg.attn_impl!r}) keeps dense per-slot "
+                    "cache entries that cannot be shared between requests"
+                )
+            pol = numerics.as_policy(cfg.policy)
+            desc = (f"{cfg.name}|{rng_seed}|{page_size}|"
+                    + ("none" if pol is None else pol.to_json()))
+            # chain root of the token-chunk hashes: pages are only valid
+            # across requests that share params, numerics and page layout
+            self._prefix_root = hashlib.sha256(desc.encode()).digest()
 
         if cache_impl == "dense":
             self.pool = None
@@ -101,6 +149,207 @@ class Engine:
             )
         else:
             raise ValueError(f"unknown cache_impl {cache_impl!r}")
+
+    # ------------------------------------------------------------------ #
+    # Prefix cache: chunk hashing, admission matching, COW, registration
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def prefix_cache_supported(cfg) -> bool:
+        """Prefix caching shares *pages*; it needs every block's KV state
+        to live in the page pool — pure-GQA decoder-only stacks.  MLA
+        latents, SSM states and cross/encoder caches are dense per-slot
+        entries that cannot be remapped between requests."""
+        if cfg.family in ("vlm", "encdec") or cfg.attn_impl != "gqa":
+            return False
+        from ..models.transformer import layer_specs
+
+        prefix_specs, pattern, _ = layer_specs(cfg)
+        return not prefix_specs and all(s.mixer == "attn" for s in pattern)
+
+    def _splice_key(self):
+        """Per-step key of the bucketed prefill-splice rescale stream."""
+        if self._kv_key is None:
+            return None
+        return jax.random.fold_in(
+            jax.random.fold_in(self._kv_key, self._STREAM_PREFILL_SPLICE),
+            self._step,
+        )
+
+    def _prompt_hashes(self, prompt: np.ndarray) -> List[str]:
+        """Chained hash per FULL page of ``prompt``: hash i commits to the
+        engine root (params seed, numerics policy, page size) and every
+        token id up to and including page i — causal attention makes a
+        page's KV a function of the whole prefix, so the chain, not the
+        chunk alone, is the cache key."""
+        toks = np.ascontiguousarray(np.asarray(prompt, np.int64))
+        ps = self.page_size
+        h = self._prefix_root
+        out = []
+        for i in range(len(toks) // ps):
+            h = hashlib.sha256(h + toks[i * ps:(i + 1) * ps].tobytes()).digest()
+            out.append(h.hex())
+        return out
+
+    def prompt_hashes(self, prompt: np.ndarray) -> List[str]:
+        """Public :meth:`_prompt_hashes` ([] when the cache is off) so the
+        scheduler can hash each prompt ONCE and reuse the result across
+        the per-step re-plans of a budget-blocked queue head."""
+        return self._prompt_hashes(prompt) if self.prefix_cache else []
+
+    def prefix_plan(
+        self, prompt: np.ndarray, hashes: Optional[List[str]] = None,
+    ) -> Tuple[int, int, int, int]:
+        """Read-only admission planning:
+        ``(n_cached, n_mapped, extra, revived)``.
+
+        ``n_cached`` prompt tokens can be skipped, ``n_mapped`` cached
+        pages would be mapped into the slot, ``extra`` pages are drawn
+        from the free pool at admission beyond the tail's own (the COW
+        copy when the cache covers the whole prompt), and ``revived``
+        matched pages are currently parked in the LRU — mapping them
+        removes them from the allocatable set, so the admission budget
+        must charge them too (an LRU-parked page counts as free until the
+        request's own ``share()`` revives it).  ``hashes`` optionally
+        carries the precomputed :meth:`prompt_hashes`."""
+        if not self.prefix_cache:
+            return 0, 0, 0, 0
+        plen = int(np.asarray(prompt).shape[0])
+        if hashes is None:
+            hashes = self._prompt_hashes(prompt)
+        ids = self.pool.match_prefix(hashes, peek=True)
+        revived = sum(1 for pid in ids if self.pool.ref[pid] == 0)
+        matched = len(ids) * self.page_size
+        if matched and matched == plen:
+            # whole prompt cached: still recompute the final token (its
+            # logits seed generation), COW-ing the last matched page so
+            # the recomputed write lands in an exclusive copy
+            return plen - 1, len(ids), 1, revived
+        return matched, len(ids), 0, revived
+
+    def admit_prefix(self, slot: int, prompt: np.ndarray,
+                     hashes: Optional[List[str]] = None) -> int:
+        """Map ``prompt``'s longest cached page-prefix into ``slot``
+        read-only; returns the number of prompt tokens admission skips
+        (chunked prefill starts at the first uncached token).  ``hashes``
+        optionally carries the precomputed :meth:`prompt_hashes`.
+
+        When the cache covers the whole prompt, the last matched page is
+        replaced by a copy-on-write clone (``PagePool.cow_page`` + a
+        device copy of the page contents) and the final prompt token is
+        recomputed into it — the recompute is bit-identical to the cached
+        row because KV rounding streams are position-addressed."""
+        if not self.prefix_cache:
+            return 0
+        plen = int(np.asarray(prompt).shape[0])
+        if hashes is None:
+            hashes = self._prompt_hashes(prompt)
+        ids = self.pool.match_prefix(hashes)
+        self._slot_hash[slot] = hashes
+        self._slot_registered[slot] = len(ids)
+        if not ids:
+            return 0
+        self.pool.share(slot, ids)
+        matched = len(ids) * self.page_size
+        if matched == plen:
+            old, new = self.pool.cow_page(slot, len(ids) - 1)
+            self._copy_page(old, new)
+            matched = plen - 1
+        return matched
+
+    def note_prefilled(self, slot: int, n_prefilled: int) -> None:
+        """Publish every prompt page ``slot`` has now fully written into
+        the prefix index (schedulers call this as prefill advances)."""
+        hashes = self._slot_hash.get(slot)
+        if not self.prefix_cache or hashes is None:
+            return
+        upto = min(n_prefilled // self.page_size, len(hashes))
+        start = self._slot_registered.get(slot, 0)
+        for i in range(start, upto):
+            self.pool.register_prefix(hashes[i], self.pool.pages_of[slot][i])
+        if upto > start:
+            self._slot_registered[slot] = upto
+
+    def tail_prefill(self, admissions, *, chunk: int = 4):
+        """Prefill every admission's uncached tail concurrently through
+        shared masked mixed steps against the mapped cached prefixes (the
+        bucketed scheduler's prefix-hit path; cache misses keep the
+        batched splice prefill).
+
+        ``admissions``: list of ``(slot, prompt, start)``.  All tails ride
+        the same ``step_chunk`` calls — per-slot numerics are independent
+        of batch composition, so this is bit-identical to prefilling them
+        one by one, at 1/len(admissions) the model calls.  Returns
+        ``{slot: final prompt token's logits row}``."""
+        state = {slot: [np.asarray(prompt), int(start)]
+                 for slot, prompt, start in admissions}
+        out = {}
+        while state:
+            toks = np.zeros((self.slots, chunk), np.int32)
+            lengths = np.zeros((self.slots,), np.int32)
+            n_new = np.zeros((self.slots,), np.int32)
+            for slot, (prompt, done) in state.items():
+                n = min(chunk, prompt.shape[0] - done)
+                toks[slot, :n] = prompt[done:done + n]
+                lengths[slot] = done
+                n_new[slot] = n
+                self.pool.ensure_capacity(slot, done + n)
+            logits = self.step_chunk(toks, lengths, n_new)
+            for slot in list(state):
+                prompt, done = state[slot]
+                done += int(n_new[slot])
+                state[slot][1] = done
+                self.note_prefilled(slot, done)
+                if done >= prompt.shape[0]:
+                    out[slot] = logits[slot]
+                    del state[slot]
+        return out
+
+    def _copy_page(self, old: int, new: int) -> None:
+        """Device-side COW body: copy page ``old``'s codes and scales into
+        page ``new`` across every paged cache entry."""
+        if self._cow_fn is None:
+            def cow(cache, old, new):
+                def cp(e, stacked):
+                    out = {}
+                    for name, v in e.items():
+                        if isinstance(v, dict) and "kp" in v:
+                            if stacked:
+                                out[name] = {
+                                    k: v[k].at[:, new].set(v[k][:, old])
+                                    for k in v
+                                }
+                            else:
+                                out[name] = {
+                                    k: v[k].at[new].set(v[k][old]) for k in v
+                                }
+                        else:
+                            out[name] = v
+                    return out
+
+                return {
+                    "prefix": tuple(cp(e, False) for e in cache["prefix"]),
+                    "blocks": tuple(cp(e, True) for e in cache["blocks"]),
+                }
+
+            self._cow_fn = jax.jit(cow)
+        self.cache = self._cow_fn(self.cache, jnp.int32(old), jnp.int32(new))
+
+    def _assert_writable(self, lengths: np.ndarray, n_new: np.ndarray) -> None:
+        """Host-side guard behind the device-side write mask: every page an
+        active slot will write this step must be exclusively owned — never
+        a shared/cached/pinned prefix page."""
+        for slot in range(self.slots):
+            n = int(n_new[slot])
+            if n <= 0:
+                continue
+            l0 = int(lengths[slot]) // self.page_size
+            l1 = (int(lengths[slot]) + n - 1) // self.page_size
+            owned = self.pool.pages_of[slot]
+            for lp in range(l0, l1 + 1):
+                assert self.pool.writable(owned[lp]), (
+                    f"slot {slot} would write into non-exclusive page "
+                    f"{owned[lp]} (logical {lp})"
+                )
 
     # ------------------------------------------------------------------ #
     def _prefill_batch_inputs(self, prompts: List[np.ndarray]):
@@ -215,12 +464,14 @@ class Engine:
                 page_ids[i] = self.pool.alloc(slot, npages)
         else:
             page_ids = np.zeros((n, 1), np.int32)
-        keys = None
-        if self._kv_key is not None:
-            keys = jax.random.fold_in(self._kv_key, 1_000_003 + self._step)
+        # NOTE: splice-written page codes are step/batch-addressed (the
+        # splice stream folds the engine step), NOT content-pure, so they
+        # are never registered in the prefix index — with the prefix cache
+        # on, run_bucketed routes every admission through the
+        # position-addressed chunked pipeline instead of this path.
         self.cache = splice(
             self.cache, small, jnp.asarray(np.asarray(slots, np.int32)),
-            jnp.asarray(page_ids), keys,
+            jnp.asarray(page_ids), self._splice_key(),
         )
         first = np.argmax(np.asarray(logits[:, : cfg.vocab]), axis=-1)
         return first, plen_total
@@ -237,40 +488,46 @@ class Engine:
 
     def decode_paged(self, tokens: np.ndarray, lengths: np.ndarray):
         """Paged decode step; allocates fresh pages for slots crossing a
-        page boundary, then runs the paged decode."""
+        page boundary, then runs the paged decode.  Slots with ``lengths
+        == 0`` are idle: their writes are masked into the null page (the
+        explicit write-mask convention), so a slot whose block table still
+        maps shared prefix pages cannot corrupt them."""
+        lengths = np.asarray(lengths)
+        active = lengths > 0
         for slot in range(self.slots):
-            if lengths[slot] > 0:
+            if active[slot]:
                 self.pool.ensure_capacity(slot, int(lengths[slot]) + 1)
-        key = None
-        if self._kv_key is not None:
-            key = jax.random.fold_in(self._kv_key, self._step)
+        self._assert_writable(lengths, active.astype(np.int32))
         logits, self.cache = self._decode_paged(
             self.params, self.cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(lengths, jnp.int32),
             jnp.asarray(self.pool.block_tables),
-            page_size=self.page_size, key=key,
+            page_size=self.page_size, key=self._token_key,
+            active=jnp.asarray(active),
         )
         self._step += 1
         return np.asarray(logits[:, : self.cfg.vocab])
 
     def step_chunk(self, tokens: np.ndarray, lengths: np.ndarray,
                    n_new: np.ndarray):
-        """Mixed prefill+decode step (continuous scheduler).
+        """Mixed prefill+decode step (continuous scheduler and the
+        bucketed prefix-hit tail prefill).
 
         tokens: [slots, T]; lengths/n_new: [slots].  Slots with ``n_new >
         1`` consume a prefill chunk, ``n_new == 1`` decode one token,
-        ``n_new == 0`` idle.  The scheduler has already allocated pages for
-        ``lengths + n_new`` tokens per slot.  Returns each slot's
-        last-valid-token logits [slots, vocab].
+        ``n_new == 0`` idle (write-masked into the null page).  The caller
+        has already allocated pages for ``lengths + n_new`` tokens per
+        slot, and every page written must be exclusively owned — shared
+        prefix pages are read-only (checked host-side here, masked
+        device-side in the model).  Returns each slot's last-valid-token
+        logits [slots, vocab].
         """
-        key = None
-        if self._kv_key is not None:
-            key = jax.random.fold_in(self._kv_key, self._step)
+        self._assert_writable(np.asarray(lengths), np.asarray(n_new))
         logits, self.cache = self._mixed_step(
             self.params, self.cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(lengths, jnp.int32), jnp.asarray(n_new, jnp.int32),
             jnp.asarray(self.pool.block_tables),
-            page_size=self.page_size, key=key,
+            page_size=self.page_size, key=self._token_key,
         )
         self._step += 1
         return np.asarray(logits[:, : self.cfg.vocab])
@@ -286,12 +543,17 @@ class Engine:
         }
 
     def preempt_slot(self, slot: int) -> dict:
-        """Spill ``slot`` to the host: copy its page *codes* + scales out of
-        every paged entry and its per-slot rows out of every dense entry
-        (MLA latents, SSM states), then free its pages.  The copies are
+        """Spill ``slot`` to the host: copy its *exclusive* page codes +
+        scales out of every paged entry and its per-slot rows out of every
+        dense entry (MLA latents, SSM states), then free those pages.
+        Shared/registered prefix pages are neither copied nor freed — they
+        stay resident under a pin (``PagePool.spill_slot``) and are
+        re-referenced on restore, so preempting a reader of a shared
+        system prompt moves no bytes for the shared pages.  The copies are
         verbatim — never re-quantized — so a later :meth:`restore_slot` is
         bit-identical.  Returns the spill record."""
-        ids = jnp.asarray(np.asarray(self.pool.pages_of[slot], np.int32))
+        spilled, pinned = self.pool.spill_plan(slot)
+        ids = jnp.asarray(np.asarray(spilled, np.int32))
 
         def gather(e, stacked):
             out = {}
@@ -309,14 +571,24 @@ class Engine:
             return out
 
         state = jax.device_get(self._map_entries(gather))
-        n_pages = len(self.pool.spill_slot(slot))
-        return {"n_pages": n_pages, "state": state}
+        self.pool.spill_slot(slot)
+        return {
+            "n_pages": len(spilled), "pinned": pinned, "state": state,
+            "hashes": self._slot_hash.pop(slot, None),
+            "registered": self._slot_registered.pop(slot, 0),
+        }
 
     def restore_slot(self, slot: int, record: dict) -> None:
         """Re-admit a preempted request into ``slot``: allocate fresh pages
-        (ids may differ from the spilled ones) and scatter the saved codes,
-        scales and dense rows back."""
-        new_ids = self.pool.restore_slot(slot, record["n_pages"])
+        for the exclusive contents (ids may differ from the spilled ones),
+        scatter the saved codes, scales and dense rows back, and
+        re-reference the pinned prefix pages at their logical indices."""
+        new_ids = self.pool.restore_slot(
+            slot, record["n_pages"], record.get("pinned", ())
+        )
+        if record.get("hashes") is not None:
+            self._slot_hash[slot] = record["hashes"]
+            self._slot_registered[slot] = record.get("registered", 0)
         ids = jnp.asarray(np.asarray(new_ids, np.int32))
         saved = record["state"]
         which = {"i": 0}
@@ -355,6 +627,8 @@ class Engine:
     def release(self, slot: int):
         if self.pool is not None:
             self.pool.free_slot(slot)
+        self._slot_hash.pop(slot, None)
+        self._slot_registered.pop(slot, None)
 
     # ------------------------------------------------------------------ #
     def kv_cache_bytes(self) -> int:
@@ -397,12 +671,12 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
         raise ValueError(f"unknown scheduler {scheduler!r}")
     return run_bucketed(eng, queue, gen=gen, temperature=temperature,
                         seed=seed, quiet=quiet, arrivals=arrivals,
-                        on_token=on_token)
+                        chunk=chunk, on_token=on_token)
 
 
 def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
                  temperature: float = 0.0, seed: int = 0, quiet: bool = False,
-                 arrivals=None, on_token=None):
+                 arrivals=None, chunk: int = 4, on_token=None):
     """Bucketed-admission loop over ``queue`` (the PR-2 baseline).
     Returns (outputs, stats)."""
     rng = np.random.default_rng(seed)
@@ -416,24 +690,32 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
     steps = 0
     decoded_tokens = 0
     occupied_slot_steps = 0
+    prefix_hit_tokens = 0
 
     while len(outputs) < requests:
         # ---- batched admission into every free slot ------------------- #
         # Admission control reserves each request's worst-case page count
         # (prompt + full generation budget) so decode can never exhaust the
         # pool mid-flight; pages themselves are still allocated lazily.
-        admit_slots, admit_prompts = [], []
+        # With the prefix cache on, the reservation stays the conservative
+        # full worst case (shared pages double-count, never under-count),
+        # and EVERY admission — hit or miss — prefills through the
+        # position-addressed chunked pipeline (Engine.tail_prefill, start
+        # = matched length): registered pages must be content-pure, which
+        # the step-keyed batched splice cannot provide.  Hits map their
+        # cached pages read-only and prefill only the uncached tail.
+        admit_slots, admit_prompts, admit_rids = [], [], []
+        chunked_admissions = []  # (slot, rid, prompt, n_cached)
         for slot in range(eng.slots):
             if slot in active or next_req >= requests:
                 continue
             if arrivals is not None and arrivals[next_req] > steps:
                 break  # FIFO: the next request has not arrived yet
+            prompt = queue[next_req]
             if eng.pool is not None:
-                worst = eng.pool.pages_needed(
-                    queue[next_req].shape[0] + img_off + gen
-                )
+                worst = eng.pool.pages_needed(prompt.shape[0] + img_off + gen)
                 if sum(reserved.values()) + worst > eng.pool.num_pages - 1:
-                    if not active and not admit_slots:
+                    if not active and not admit_slots and not chunked_admissions:
                         # nothing in flight will ever free pages: this
                         # request can never fit -> fail instead of spinning
                         raise RuntimeError(
@@ -443,11 +725,15 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
                         )
                     break  # wait for in-flight requests to free pages
                 reserved[slot] = worst
-            admit_slots.append(slot)
-            admit_prompts.append(queue[next_req])
+            n_cached = eng.admit_prefix(slot, prompt)
+            if eng.prefix_cache:
+                chunked_admissions.append((slot, next_req, prompt, n_cached))
+            else:
+                admit_slots.append(slot)
+                admit_prompts.append(prompt)
+                admit_rids.append(next_req)
             next_req += 1
         if admit_prompts:
-            base_rid = next_req - len(admit_slots)
             # bucket by prompt length: each bucket is one batched prefill
             by_len: Dict[int, List[int]] = {}
             for i, p in enumerate(admit_prompts):
@@ -459,11 +745,24 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
                 )
                 for j, i in enumerate(idxs):
                     active[admit_slots[i]] = dict(
-                        rid=base_rid + i, pos=plen_total,
+                        rid=admit_rids[i], pos=plen_total,
                         out=[int(first[j])], last=int(first[j]),
                     )
                     if on_token is not None:
-                        on_token(base_rid + i, int(first[j]), steps)
+                        on_token(admit_rids[i], int(first[j]), steps)
+        if chunked_admissions:
+            rows = eng.tail_prefill(
+                [(slot, prompt, n_cached)
+                 for slot, _, prompt, n_cached in chunked_admissions],
+                chunk=chunk,
+            )
+            for slot, rid, prompt, n_cached in chunked_admissions:
+                first = int(np.argmax(rows[slot][: eng.cfg.vocab]))
+                prefix_hit_tokens += n_cached
+                active[slot] = dict(rid=rid, pos=prompt.shape[0] + img_off,
+                                    out=[first], last=first)
+                if on_token is not None:
+                    on_token(rid, first, steps)
 
         if not active:
             # nothing in flight (requests still arriving): let time pass
@@ -509,11 +808,13 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         tok_s=decoded_tokens / dt if dt > 0 else 0.0,
         slot_occupancy=occupied_slot_steps / max(steps * eng.slots, 1),
         preemptions=0,
+        prefix_hit_tokens=prefix_hit_tokens,
         cache_bytes=eng.kv_cache_bytes(),
         cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
     )
     if eng.pool is not None:
         stats["page_utilization"] = eng.pool.mean_utilization()
+        stats["prefix"] = eng.pool.prefix_stats()
     if not quiet:
         print(f"[serve:bucketed:{eng.cache_impl}] {requests} requests, "
               f"{steps} decode steps, {stats['tok_s']:.1f} tok/s, "
@@ -560,6 +861,8 @@ def run_continuous(eng: Engine, queue: List[np.ndarray], *, gen: int,
         steps=sched.steps, wall_s=dt,
         tok_s=sched.decoded_tokens / dt if dt > 0 else 0.0,
         prefill_tokens=sched.prefill_tokens,
+        prefix_hit_tokens=sched.prefix_hit_tokens,
+        prefix=eng.pool.prefix_stats(),
         slot_occupancy=sched.occupied_slot_steps / max(sched.steps * eng.slots, 1),
         mean_latency_steps=sched.mean_latency_steps(),
         preemptions=sched.preemptions,
@@ -602,11 +905,19 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=0,
                     help="page-pool size (0 = worst-case slots*max_seq)")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="ref-counted prefix caching: requests sharing a "
+                         "prompt prefix reuse its KV pages and prefill "
+                         "only the uncached tail (paged pure-GQA caches)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", default="8",
                     help="prompt length, or a comma list cycled over the "
                          "requests for a mixed-length stream (e.g. 4,12,8)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared tokens to every prompt "
+                         "(a common system prompt; the prefix-cache "
+                         "workload)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=4,
                     help="prefill tokens per step per slot (continuous)")
@@ -638,16 +949,29 @@ def main(argv=None):
         print("# continuous scheduling needs a paged cache and decode-only "
               "prefill; falling back to the bucketed scheduler")
         args.scheduler = "bucketed"
+    prefix_on = args.prefix_cache == "on"
+    if prefix_on and (args.cache_impl != "paged"
+                      or not Engine.prefix_cache_supported(cfg)):
+        print("# prefix caching needs a paged pure-GQA cache; ignoring "
+              "--prefix-cache on")
+        prefix_on = False
     plens = [int(s) for s in str(args.prompt_len).split(",") if s]
-    max_seq = max(plens) + args.gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    max_seq = (max(plens) + args.shared_prefix + args.gen
+               + (cfg.n_img_tokens if cfg.family == "vlm" else 0))
     eng = Engine(
         cfg, slots=args.slots, max_seq=max_seq,
         cache_impl=args.cache_impl, page_size=args.page_size,
         num_pages=args.pages or None, rng_seed=args.seed,
+        prefix_cache=prefix_on,
     )
     rng = np.random.default_rng(args.seed)
-    queue = [rng.integers(0, cfg.vocab, size=plens[i % len(plens)])
-             for i in range(args.requests)]
+    shared = (rng.integers(0, cfg.vocab, size=args.shared_prefix)
+              if args.shared_prefix > 0 else None)
+    queue = []
+    for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab, size=plens[i % len(plens)])
+        queue.append(tail if shared is None
+                     else np.concatenate([shared, tail]))
     arrivals = None
     if args.arrival_rate > 0:
         inter = rng.exponential(1.0 / args.arrival_rate, size=args.requests)

@@ -141,9 +141,27 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
     (kp/vp: [P, page, KV, hd], ks/vs: [P] f32); paged: the step's shared
     state {"block_tables" [B, maxp], "lengths" [B] (context length per slot
     BEFORE this token), "page_size", "key" (stochastic-write PRNG key or
-    None)}.  Writes the new token's K/V into its page (fresh pages get a
-    pow2 scale from the token's absmax), then runs the integer-domain paged
-    decode attention.  Returns (y, new_cache).
+    None), "active" (optional [B] bool write mask)}.  Writes the new
+    token's K/V into its page (fresh pages get a pow2 scale from the
+    token's absmax), then runs the integer-domain paged decode attention.
+    Returns (y, new_cache).
+
+    Two serving contracts live here:
+
+      * **Explicit write mask.**  ``paged["active"]`` is passed straight
+        through to the page write as its write mask: masked lanes (idle
+        slots, padding sub-steps of a mixed prefill+decode chunk) are
+        redirected into the reserved null page 0 and never claim a page
+        scale — a masked lane can never scribble into a real page, which
+        prefix caching requires (mapped prefix pages are shared
+        read-only between slots).
+      * **Position-addressed stochastic streams.**  The layer's PRNG key
+        is folded with each slot's *write position*, so the rounding bits
+        of a KV write depend only on (layer, position) — never on the
+        engine step or batch composition.  Page codes are therefore a
+        pure function of the token content that produced them, which is
+        what makes a prefix-cache hit bit-identical to recomputing the
+        prefix (tests/test_prefix_cache.py).
     """
     B = x.shape[0]
     KV = cfg.n_kv_heads
@@ -158,16 +176,19 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
     page_ids = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     rows = lengths - logical * page_size
     active = paged.get("active")
-    if active is not None:
-        # masked sub-step (mixed prefill+decode): inactive slots scribble
-        # into the reserved null page instead of their own pages
-        page_ids = jnp.where(active, page_ids, 0)
     key = paged.get("key")
-    kk, vk = (None, None) if key is None else tuple(jax.random.split(key))
+    if key is None:
+        kk = vk = None
+    else:
+        kk, vk = tuple(jax.random.split(key))
+        fold_pos = jax.vmap(jax.random.fold_in, in_axes=(None, 0))
+        kk, vk = fold_pos(kk, lengths), fold_pos(vk, lengths)
     kp, ks = numerics.kv_write_token(pol, cache["kp"], cache["ks"],
-                                     k_new[:, 0], page_ids, rows, key=kk)
+                                     k_new[:, 0], page_ids, rows, key=kk,
+                                     write_mask=active)
     vp, vs = numerics.kv_write_token(pol, cache["vp"], cache["vs"],
-                                     v_new[:, 0], page_ids, rows, key=vk)
+                                     v_new[:, 0], page_ids, rows, key=vk,
+                                     write_mask=active)
     window = 0 if is_global else cfg.window
     out = numerics.attention(
         q, kp, vp, ks, vs, block_tables, lengths + 1, pol,

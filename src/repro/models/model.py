@@ -207,19 +207,25 @@ class Model:
         return logits, {"prefix": tuple(new_prefix), "blocks": new_caches}
 
     def decode_step_paged(self, params, cache, tokens, lengths, block_tables,
-                          *, page_size: int, key=None):
+                          *, page_size: int, key=None, active=None):
         """One decode step against the paged cache (serving path).
 
         tokens: [B] int32; lengths: [B] int32 per-slot context lengths
         (BEFORE this token); block_tables: [B, maxp] int32 page ids;
         ``key``: PRNG key for stochastic-rounding KV writes (None =>
-        deterministic writes in cfg.quant.mode).  GQA layers read/write the
+        deterministic writes in cfg.quant.mode) — folded with each slot's
+        write position inside the attention layer, never with the engine
+        step, so page codes are reproducible functions of content;
+        ``active``: optional [B] bool write mask — idle slots' page
+        writes land in the reserved null page and their dense cache
+        entries are kept, so a slot whose block table still maps shared
+        prefix pages can never corrupt them.  GQA layers read/write the
         page pool; MLA/SSM/cross entries keep their dense slot caches,
         indexed by per-slot positions.  Returns (logits, new_cache).
         """
         return self._paged_token_step(
             params, cache, tokens, lengths, block_tables,
-            page_size=page_size, key=key, active=None,
+            page_size=page_size, key=key, active=active,
         )
 
     def _paged_token_step(self, params, cache, tokens, lengths, block_tables,
@@ -276,13 +282,23 @@ class Model:
         chunk); block_tables: [B, maxp] int32.
 
         Internally scans T single-token sub-steps with per-slot active
-        masks: sub-step t processes ``tokens[:, t]`` at position
-        ``lengths + t`` for slots with ``t < n_new``.  Inactive slots'
-        page writes land in the reserved null page and their dense cache
-        rows are kept via a select, so a decode slot (1 valid token) and a
-        mid-prefill slot (T valid tokens) coexist in one jitted call —
-        chunked prefill never blocks decode.  The caller must have
-        allocated pages for ``lengths + n_new`` tokens per slot.
+        masks (the **explicit write mask** of the page writes): sub-step t
+        processes ``tokens[:, t]`` at position ``lengths + t`` for slots
+        with ``t < n_new``.  Inactive slots' page writes land in the
+        reserved null page and their dense cache rows are kept via a
+        select, so a decode slot (1 valid token) and a mid-prefill slot
+        (T valid tokens) coexist in one jitted call — chunked prefill
+        never blocks decode, and a slot whose block table maps shared
+        prefix pages can never scribble into them from a masked lane.
+        The caller must have allocated pages for ``lengths + n_new``
+        tokens per slot.
+
+        ``key`` is ONE stream key for the whole chunk — every sub-step
+        sees the same key, and the attention layer folds each slot's
+        write position into it.  Stochastic KV rounding is therefore
+        addressed by (layer, position), never by the sub-step index or
+        the engine step, which keeps page codes a pure function of
+        content (the prefix-cache bit-identity contract).
 
         Returns (logits [B, vocab_padded] of each slot's LAST valid token —
         zeros for idle slots — and the new cache).
@@ -292,28 +308,22 @@ class Model:
         tokens = jnp.asarray(tokens, jnp.int32)
         lengths = jnp.asarray(lengths, jnp.int32)
         n_new = jnp.asarray(n_new, jnp.int32)
-        use_key = key is not None
-        keys = (
-            jax.random.split(key, T) if use_key
-            else jnp.zeros((T, 2), jnp.uint32)
-        )
         last0 = jnp.zeros((B, cfg.vocab_padded), jnp.float32)
 
         def body(carry, scanned):
             cache, last = carry
-            t, toks_t, key_t = scanned
+            t, toks_t = scanned
             act = t < n_new
             pos = lengths + jnp.minimum(t, jnp.maximum(n_new - 1, 0))
             logits, cache = self._paged_token_step(
                 params, cache, toks_t, pos, block_tables,
-                page_size=page_size, key=key_t if use_key else None,
-                active=act,
+                page_size=page_size, key=key, active=act,
             )
             last = jnp.where(act[:, None], logits, last)
             return (cache, last), None
 
         (cache, last), _ = jax.lax.scan(
-            body, (cache, last0), (jnp.arange(T), tokens.T, keys)
+            body, (cache, last0), (jnp.arange(T), tokens.T)
         )
         return last, cache
 

@@ -260,20 +260,24 @@ def kv_decode(x, pol: PolicyLike):
 
 
 def kv_write_token(pol: PolicyLike, pages, scales, new, page_ids, rows, *,
-                   key=None):
+                   key=None, write_mask=None):
     """One decode token's K or V into its page (see
-    ``serving.page_pool.write_token_page``); fmt/mode resolved here."""
+    ``serving.page_pool.write_token_page``); fmt/mode resolved here.
+
+    ``key`` may be a single PRNG key or a per-slot batch (the
+    position-addressed serving streams); ``write_mask`` is the explicit
+    [B] write mask — masked lanes land in the reserved null page."""
     from ..serving.page_pool import write_token_page
 
     if is_legacy_config(pol):
         fmt = pol.kv_fmt if pol.kv_cache_fp8 else None
         mode = "stochastic" if key is not None else pol.mode
         return write_token_page(pages, scales, new, page_ids, rows, fmt=fmt,
-                                mode=mode, key=key)
+                                mode=mode, key=key, write_mask=write_mask)
     fmt = kv_format(pol)
     mode = "rne" if pol is None else _kv_mode(pol, "kv_write", key is not None)
     return write_token_page(pages, scales, new, page_ids, rows, fmt=fmt,
-                            mode=mode, key=key)
+                            mode=mode, key=key, write_mask=write_mask)
 
 
 def kv_write_prefill(pol: PolicyLike, pages, scales, src, page_ids, *,

@@ -1,10 +1,13 @@
 """Serving subsystem: paged FP8 KV cache + integer-domain decode attention.
 
-``page_pool`` owns the global page pool (host allocator + device write
-helpers); ``kernels.paged_attention`` consumes the paged layout;
-``scheduler`` is the continuous-batching admission/preemption state
-machine; the ``Engine`` in ``launch.serve`` executes its decisions
-(mixed prefill+decode steps, page spills/restores, eviction).
+``page_pool`` owns the global page pool (host allocator with per-page
+refcounts, the prefix-cache index with LRU eviction and copy-on-write
+pages, plus device write helpers); ``kernels.paged_attention`` consumes
+the paged layout; ``scheduler`` is the continuous-batching
+admission/preemption state machine with prefix-cache-aware admission; the
+``Engine`` in ``launch.serve`` executes its decisions (mixed
+prefill+decode steps, prefix matching/registration, page spills/restores,
+eviction).
 """
 from .page_pool import (
     PagePool,

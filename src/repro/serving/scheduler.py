@@ -33,9 +33,19 @@ Request lifecycle::
                         +------- PREEMPTED <------+
                                  (spilled; resumes with restored pages)
 
+  * **Prefix-cache admission.**  When the engine's prefix cache is on,
+    admission matches each queued prompt's longest cached page-prefix
+    (``Engine.prefix_plan`` / ``admit_prefix``): matched pages are mapped
+    read-only into the slot, only the *uncached tail* is charged to the
+    page budget, and chunked prefill starts at the first uncached token
+    (``req.n_prefilled`` starts at the matched length).  As prefill
+    completes pages, ``Engine.note_prefilled`` publishes them for later
+    requests.
+
 The scheduler is pure host-side Python/numpy; the engine collaborator only
 needs ``slots``, ``pool``, ``step_chunk``, ``preempt_slot``,
-``restore_slot`` and ``release`` (see ``launch.serve.Engine``).
+``restore_slot``, ``release`` and the prefix-cache trio ``prefix_plan`` /
+``admit_prefix`` / ``note_prefilled`` (see ``launch.serve.Engine``).
 """
 from __future__ import annotations
 
@@ -63,10 +73,16 @@ class Request:
     gen: int
     arrival: int = 0  # step index at which the request becomes admissible
     state: str = QUEUED
-    n_prefilled: int = 0  # prompt tokens already written to the KV cache
+    # prompt tokens already in the KV cache: prefilled by this request OR
+    # served read-only from the prefix cache at admission
+    n_prefilled: int = 0
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     spill: Optional[dict] = None  # engine spill record while PREEMPTED
+    # prompt chunk hashes, computed once at first admission attempt (the
+    # chain is content-pure; re-planning a budget-blocked request every
+    # step must not re-hash a long prompt)
+    prefix_hashes: Optional[List[str]] = None
     preemptions: int = 0
     finished_step: int = -1  # -> per-request latency in the run stats
 
@@ -115,6 +131,7 @@ class ContinuousScheduler:
         self.steps = 0
         self.decoded_tokens = 0
         self.prefill_tokens = 0
+        self.prefix_hit_tokens = 0  # prompt tokens served from the cache
         self.occupied_slot_steps = 0
         self.preemptions = 0
 
@@ -153,14 +170,34 @@ class ContinuousScheduler:
         # New admissions: FIFO over arrived requests.  Held back while
         # anything is preempted (spilled work resumes first — admitting
         # fresh requests over it would thrash the pool).  A request only
-        # needs its first prefill chunk's pages to join.
-        budget = self.pool.free_pages
-        while free and self.queued and not self.preempted:
+        # needs its first UNCACHED prefill chunk's pages to join: its
+        # longest cached prompt prefix is mapped read-only from the prefix
+        # index, and only the tail (plus the copy-on-write clone when the
+        # cache covers the whole prompt) is charged to the page budget.
+        charged = 0  # first-chunk pages of this step's admissions, not
+        while free and self.queued and not self.preempted:  # yet allocated
             req = self.queued[0]
             if req.arrival > self.steps:
                 break
-            first = self.pool.pages_needed(min(self.chunk, req.plen))
-            if first > budget:
+            if req.prefix_hashes is None:
+                req.prefix_hashes = self.eng.prompt_hashes(req.prompt)
+            n_cached, n_mapped, extra, revived = self.eng.prefix_plan(
+                req.prompt, hashes=req.prefix_hashes
+            )
+            tail = req.plen - n_cached
+            # the admission bill: the tail's first chunk + the COW clone +
+            # the matched pages this request will revive out of the LRU
+            # (parked pages count as free_pages until share() re-refs
+            # them, so they must be charged or the later allocation could
+            # exhaust the pool mid-admission)
+            first = extra + revived + max(
+                0,
+                self.pool.pages_needed(n_cached + min(self.chunk, tail))
+                - n_mapped,
+            )
+            # free_pages is read live: mapping a cached prefix revives LRU
+            # pages and draws the COW clone, both visible immediately
+            if charged + first > self.pool.free_pages:
                 if not self.active and self.pool.used_pages == 0:
                     raise RuntimeError(
                         f"request {req.rid} needs {first} pages for its "
@@ -168,9 +205,15 @@ class ContinuousScheduler:
                         f"{self.pool.num_pages - 1}; raise --pages"
                     )
                 break
-            budget -= first
             slot = free.pop(0)
             req.slot = slot
+            got = self.eng.admit_prefix(slot, req.prompt,
+                                        hashes=req.prefix_hashes)
+            req.n_prefilled = got
+            self.prefix_hit_tokens += got
+            # the COW draw and the revivals are already reflected in the
+            # live free_pages; keep charging only the unallocated tail
+            charged += first - extra - revived
             req.state = PREFILL
             self.active[slot] = req
             self.queued.pop(0)
@@ -237,6 +280,8 @@ class ContinuousScheduler:
             if req.state == PREFILL:
                 req.n_prefilled += n
                 self.prefill_tokens += n
+                # publish newly completed prompt pages for later requests
+                self.eng.note_prefilled(slot, req.n_prefilled)
                 if req.n_prefilled < req.plen:
                     continue
                 req.state = DECODE  # last prompt token's logits sample next

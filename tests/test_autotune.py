@@ -63,6 +63,34 @@ def test_forced_measurement_populates_cache(tuner_cache, monkeypatch):
     assert tuner_cache.exists()
 
 
+def test_new_cache_keys_embed_device_kind(tuner_cache, monkeypatch):
+    """A tiling measured on one device model must not be replayed on a
+    different one sharing the cache file: fresh entries carry
+    jax.devices()[0].device_kind in the key."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    autotune.matmul_blocks(16, 16, 16, fmt="e4m3", impl="lns", interpret=True)
+    data = json.loads(tuner_cache.read_text())
+    kind = autotune._device_kind()
+    assert kind not in ("", "unknown")
+    (key,) = data.keys()
+    assert key.startswith(f"matmul|cpu|{kind}|i1|16x16x16|")
+
+
+def test_pre_device_kind_cache_entries_stay_readable(tuner_cache):
+    """Entries written before the device-kind key field existed resolve
+    via the legacy-format fallback, and a device-kind entry wins over a
+    legacy one for the same problem."""
+    legacy = "matmul|cpu|i1|48x48x48|e4m3|lns|rne"
+    autotune._store(legacy, (16, 16, 16, 8))
+    autotune.clear_memory_cache()
+    assert autotune.matmul_blocks(48, 48, 48, fmt="e4m3", impl="lns",
+                                  interpret=True) == (16, 16, 16, 8)
+    new = f"matmul|cpu|{autotune._device_kind()}|i1|48x48x48|e4m3|lns|rne"
+    autotune._store(new, (32, 32, 32, 8))
+    assert autotune.matmul_blocks(48, 48, 48, fmt="e4m3", impl="lns",
+                                  interpret=True) == (32, 32, 32, 8)
+
+
 def test_choose_impl_on_cpu_is_xla(tuner_cache, monkeypatch):
     monkeypatch.delenv("REPRO_MATMUL_IMPL", raising=False)
     assert autotune.choose_matmul_impl(64, 64, 64, fmt="e4m3") == "xla"

@@ -1,0 +1,362 @@
+"""Ref-counted prefix caching: COW pages, eviction, PRNG streams.
+
+Covers the prefix-cache PR's contracts:
+
+  * end-to-end **bit-identity**: a shared-prefix workload with the prefix
+    cache on emits token-for-token identical outputs to cache-off, with
+    stochastic KV rounding ON, under both schedulers (possible because KV
+    write rounding is position-addressed, so cached page codes equal what
+    the request would have written itself);
+  * copy-on-write of the partial last page when the cache covers a whole
+    prompt;
+  * refcount lifecycle: share / release-to-LRU / revive / LRU eviction,
+    and that eviction can never touch a referenced page;
+  * preempt-while-shared: spilling a reader of shared pages copies and
+    frees only its exclusive pages, pins the shared ones, and restores
+    bit-identically;
+  * the pool partition invariant (every page id in exactly one of: free
+    list, referenced by a slot, prefix-cache LRU, spill-record pin);
+  * the disjoint-PRNG-streams regression (prefill splice keys used to
+    collide with decode-step keys at step 1_000_003 + s).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import serve
+from repro.serving import PagePool
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
+
+
+def _engine(cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("cache_impl", "paged")
+    kw.setdefault("page_size", 4)
+    return serve.Engine(cfg, **kw)
+
+
+def _shared_prefix_queue(cfg, seed, *, shared=12, tails=(4, 5, 6, 4, 7)):
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab, size=shared)
+    return [np.concatenate([head, rng.integers(0, cfg.vocab, size=t)])
+            for t in tails]
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end bit-identity (the acceptance contract)
+# --------------------------------------------------------------------------- #
+def test_prefix_cache_bit_identical_continuous_stochastic(cfg):
+    """Cache on == cache off, token for token, with stochastic KV writes
+    ON.  This is exact, not argmax-robust: KV rounding streams are
+    addressed by (layer, position), so a cached page holds bit-for-bit
+    the codes the request would have written itself."""
+    queue = _shared_prefix_queue(cfg, 0)
+    arrivals = [0, 1, 3, 4, 6]
+    outs, stats = {}, {}
+    for pc in (False, True):
+        eng = _engine(cfg, prefix_cache=pc)
+        assert eng._kv_key is not None  # stochastic path is live
+        outs[pc], stats[pc] = serve.run(
+            eng, [q.copy() for q in queue], gen=6, quiet=True,
+            scheduler="continuous", arrivals=arrivals, chunk=4,
+        )
+        eng.pool.assert_invariants()
+    assert outs[True] == outs[False]
+    assert stats[True]["prefix_hit_tokens"] > 0
+    assert stats[True]["prefill_tokens"] < stats[False]["prefill_tokens"]
+    assert stats[True]["prefix"]["hit_rate"] > 0
+
+
+def test_prefix_cache_matches_bucketed_tokens(cfg):
+    """Bucketed scheduler, cache on vs off.  Cache-off prefills through
+    the batched splice, cache-on prefills the tail through chunked paged
+    steps — numerically distinct pipelines, so (like the continuous-vs-
+    bucketed equivalence test) this pins token equality at smoke scale
+    with deterministic KV rounding, not bit-level logits."""
+    queue = _shared_prefix_queue(cfg, 1, shared=8, tails=(4, 6, 4, 5))
+    outs = {}
+    for pc in (False, True):
+        eng = _engine(cfg, prefix_cache=pc, stochastic_kv=False)
+        outs[pc], stats = serve.run(eng, [q.copy() for q in queue], gen=5,
+                                    quiet=True, scheduler="bucketed")
+        eng.pool.assert_invariants()
+        if pc:
+            assert stats["prefix_hit_tokens"] > 0
+    assert outs[True] == outs[False]
+
+
+def test_fully_cached_prompt_takes_cow_and_stays_bit_identical(cfg):
+    """Identical prompts whose length is an exact page multiple: the whole
+    prompt is cached, admission clones the last matched page copy-on-write
+    and recomputes only the final token — outputs still bit-identical to
+    cache-off, stochastic KV on."""
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, size=8)  # 2 full pages of 4
+    queue = [prompt.copy() for _ in range(3)]
+    outs = {}
+    for pc in (False, True):
+        eng = _engine(cfg, slots=1, prefix_cache=pc)
+        outs[pc], stats = serve.run(eng, [q.copy() for q in queue], gen=5,
+                                    quiet=True, scheduler="continuous")
+        eng.pool.assert_invariants()
+        if pc:
+            assert stats["prefix"]["cow_copies"] == 2  # requests 2 and 3
+            # each later request prefills exactly the recomputed token
+            assert stats["prefill_tokens"] == 8 + 1 + 1
+    assert outs[True] == outs[False]
+    assert outs[True][0] == outs[True][1] == outs[True][2]
+
+
+def test_preempt_while_shared_restores_bit_identically(cfg):
+    """A pool too small for the shared-prefix stream forces preemptions of
+    slots that map shared pages; spill pins them in place (no copy, no
+    free) and outputs still match the uncontended run exactly."""
+    queue = _shared_prefix_queue(cfg, 3, shared=8, tails=(3, 4, 3, 4))
+    want, _ = serve.run(
+        _engine(cfg, slots=3, prefix_cache=True),
+        [q.copy() for q in queue], gen=6, quiet=True, scheduler="continuous",
+    )
+    eng = _engine(cfg, slots=3, prefix_cache=True, num_pages=9)
+    got, stats = serve.run(eng, [q.copy() for q in queue], gen=6, quiet=True,
+                           scheduler="continuous")
+    eng.pool.assert_invariants()
+    assert stats["preemptions"] > 0
+    assert got == want
+
+
+def test_admission_budget_charges_revived_lru_pages(cfg):
+    """Regression: the admission check must charge the matched pages the
+    request will revive out of the LRU — they count as free_pages until
+    its own share() re-refs them.  With the free list drained (another
+    slot holds every free page) and the cached prompt's pages the only
+    evictable ones, a fully-cached admission used to pass the check and
+    then crash in cow_page with 'page pool exhausted'; it must defer
+    until pages are freed instead."""
+    from repro.serving import ContinuousScheduler, Request
+
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=8)  # 2 full pages of 4
+    eng = _engine(cfg, slots=2, max_seq=16, num_pages=7, prefix_cache=True)
+    sched = ContinuousScheduler(eng, chunk=4)
+    sched.add(Request(rid=0, prompt=prompt.copy(), gen=2))
+    first = sched.run()  # caches the prompt; its 2 pages park in the LRU
+    assert len(eng.pool._lru) == 2
+    eng.pool.alloc(1, 4)  # another request pins the entire free list
+    assert eng.pool.free_pages == 2  # exactly the parked matched pages
+    sched.add(Request(rid=1, prompt=prompt.copy(), gen=2))
+    sched.step()  # fully-cached plan needs revive(2) + COW(1) > 2: defer
+    assert sched.queued and not sched.active  # deferred, no crash
+    eng.pool.assert_invariants()
+    eng.pool.free_slot(1)  # the other request finishes
+    while sched.pending():
+        sched.step()
+    eng.pool.assert_invariants()
+    assert sched.outputs[1] == first[0]  # same prompt, greedy: same tokens
+    assert sched.prefix_hit_tokens > 0
+
+
+# --------------------------------------------------------------------------- #
+# Pool unit tests: refcounts, LRU, COW, pinning
+# --------------------------------------------------------------------------- #
+def test_share_and_release_refcounts():
+    pool = PagePool(num_pages=10, page_size=4, slots=3, max_pages_per_slot=4)
+    a = pool.alloc(0, 2)
+    for i, pid in enumerate(a):
+        pool.register_prefix(f"h{i}", pid)
+    pool.share(1, a)
+    assert pool.ref[a[0]] == 2 and pool.ref[a[1]] == 2
+    assert not pool.writable(a[0])  # shared: never scribble into it
+    pool.free_slot(0)
+    assert pool.ref[a[0]] == 1  # still referenced by slot 1
+    pool.free_slot(1)
+    # last reference dropped: cached pages park in the LRU, stay matchable
+    assert pool.ref[a[0]] == 0
+    assert pool.match_prefix(["h0", "h1"]) == a
+    assert pool.free_pages == 9  # parked pages are allocatable (evictable)
+    pool.assert_invariants()
+    # re-share revives them out of the LRU
+    pool.share(2, a)
+    assert pool.ref[a[0]] == 1
+    pool.assert_invariants()
+
+
+def test_eviction_takes_lru_never_referenced_pages():
+    pool = PagePool(num_pages=6, page_size=4, slots=2, max_pages_per_slot=5)
+    a = pool.alloc(0, 3)
+    for i, pid in enumerate(a):
+        pool.register_prefix(f"h{i}", pid)
+    pool.free_slot(0)          # 3 cached pages parked, LRU order a[0..2]
+    keep = pool.match_prefix(["h0"])
+    pool.share(1, keep)        # a[0] referenced again
+    got = pool.alloc(1, 4)     # needs eviction: only 2 free + 2 evictable
+    assert pool.evictions == 2
+    assert a[0] not in got     # the referenced page survived
+    assert pool.match_prefix(["h0"], peek=True) == [a[0]]
+    assert pool.match_prefix(["h1"], peek=True) == []  # evicted
+    pool.assert_invariants()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(0, 1)  # nothing evictable is left
+
+
+def test_cow_page_replaces_mapping_and_derefs_source():
+    pool = PagePool(num_pages=8, page_size=4, slots=2, max_pages_per_slot=3)
+    a = pool.alloc(0, 2)
+    pool.register_prefix("h0", a[0])
+    pool.register_prefix("h1", a[1])
+    pool.share(1, a)
+    old, new = pool.cow_page(1, 1)
+    assert old == a[1] and new not in a
+    assert pool.pages_of[1] == [a[0], new]
+    assert pool.block_tables[1, 1] == new
+    assert pool.ref[old] == 1 and pool.ref[new] == 1
+    assert pool.writable(new) and not pool.writable(old)
+    assert pool.cow_copies == 1
+    pool.assert_invariants()
+
+
+def test_spill_pins_registered_pages_and_frees_exclusive_exactly_once():
+    pool = PagePool(num_pages=10, page_size=4, slots=2, max_pages_per_slot=4)
+    a = pool.alloc(0, 4)
+    pool.register_prefix("h0", a[0])
+    pool.register_prefix("h1", a[1])
+    spilled, pinned = pool.spill_slot(0)
+    assert spilled == a[2:] and pinned == [(0, a[0]), (1, a[1])]
+    # exclusive ids appear exactly once on the free list, at the front
+    assert pool._free[:2] == a[2:]
+    assert sorted(pool._free) == sorted(set(pool._free))
+    # pinned pages are resident but neither free, owned, nor evictable
+    pool.assert_invariants()
+    assert pool.free_pages == 7
+    # churn cannot evict or reuse the pinned pages
+    churn = pool.alloc(1, 4)
+    assert set(churn).isdisjoint({a[0], a[1]})
+    fresh = pool.restore_slot(0, 2, pinned)
+    assert pool.pages_of[0][:2] == [a[0], a[1]]
+    assert pool.pages_of[0][2:] == fresh and len(fresh) == 2
+    assert pool.ref[a[0]] == 1 and not pool._pinned
+    pool.assert_invariants()
+
+
+def test_pool_invariants_through_serving_workload(cfg):
+    """The partition invariant holds at every scheduler step of a real
+    contended prefix-cache workload (admissions, COW, preemption, spills,
+    restores, evictions, releases)."""
+    from repro.serving import ContinuousScheduler, Request
+
+    queue = _shared_prefix_queue(cfg, 4, shared=8, tails=(4, 4, 5, 4, 6))
+    eng = _engine(cfg, slots=3, prefix_cache=True, num_pages=10)
+    sched = ContinuousScheduler(eng, chunk=4)
+    for i, p in enumerate(queue):
+        sched.add(Request(rid=i, prompt=p, gen=5, arrival=i))
+    while sched.pending():
+        sched.step()
+        eng.pool.assert_invariants()
+    assert sorted(sched.outputs) == list(range(len(queue)))
+    assert sched.prefix_hit_tokens > 0
+
+
+# --------------------------------------------------------------------------- #
+# PRNG streams (the stream-collision bugfix)
+# --------------------------------------------------------------------------- #
+def test_prefill_and_token_write_prng_streams_are_disjoint(cfg):
+    """The seed engine derived prefill-splice keys as fold_in(key,
+    1_000_003 + step) and token-write keys as fold_in(key, step), so a
+    long-running engine replayed prefill keys at decode step 1_000_003 +
+    s.  Streams now diverge at the first fold: no splice key can equal
+    any position-folded token-write key, including at the historical
+    collision offsets."""
+    eng = _engine(cfg, prefix_cache=False)
+    assert eng._kv_key is not None
+    splice_keys = set()
+    for step in list(range(8)) + [1_000_000, 1_000_003, 1_000_010]:
+        eng._step = step
+        splice_keys.add(tuple(np.asarray(eng._splice_key()).ravel()))
+    token_keys = set()
+    for pos in list(range(8)) + [1_000_003 + s for s in range(8)]:
+        token_keys.add(tuple(
+            np.asarray(jax.random.fold_in(eng._token_key, pos)).ravel()
+        ))
+    assert len(splice_keys) == 11  # steps map to distinct keys
+    assert splice_keys.isdisjoint(token_keys)
+    # and the token stream itself never folds the engine step: the base
+    # stream key is independent of _step
+    eng._step = 123
+    base = tuple(np.asarray(eng._token_key).ravel())
+    eng._step = 456
+    assert tuple(np.asarray(eng._token_key).ravel()) == base
+
+
+def test_token_write_keys_are_position_addressed(cfg):
+    """Two engines at different step counters write bit-identical KV codes
+    for the same (token, position): page codes depend on content, never on
+    when the step ran — the prefix cache's soundness condition."""
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, size=6)
+    runs = []
+    for warm_steps in (0, 3):
+        eng = _engine(cfg, slots=2, max_seq=16)
+        if warm_steps:
+            # burn engine steps on the OTHER slot before admitting
+            w = rng.integers(0, cfg.vocab, size=4)
+            eng.pool.ensure_capacity(1, 4)
+            toks = np.zeros((2, 4), np.int32)
+            toks[1] = w
+            eng.step_chunk(toks, np.zeros(2, np.int32),
+                           np.array([0, 4], np.int32))
+            eng.release(1)
+        eng.pool.ensure_capacity(0, 6)
+        toks = np.zeros((2, 6), np.int32)
+        toks[0] = prompt
+        eng.step_chunk(toks, np.zeros(2, np.int32),
+                       np.array([6, 0], np.int32))
+        ids = list(eng.pool.pages_of[0])
+        entry = eng.cache["blocks"][0]["self"]
+        runs.append({
+            k: np.asarray(entry[k])[:, ids] for k in ("kp", "vp", "ks", "vs")
+        })
+    for k in ("kp", "vp", "ks", "vs"):
+        np.testing.assert_array_equal(runs[0][k], runs[1][k], err_msg=k)
+
+
+# --------------------------------------------------------------------------- #
+# Guard rails
+# --------------------------------------------------------------------------- #
+def test_prefix_cache_rejects_unsupported_configs():
+    mla = get_config("deepseek-v2-lite-16b", smoke=True)
+    assert not serve.Engine.prefix_cache_supported(mla)
+    with pytest.raises(ValueError, match="pure-GQA"):
+        serve.Engine(mla, slots=1, max_seq=16, cache_impl="paged",
+                     page_size=4, prefix_cache=True)
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    assert serve.Engine.prefix_cache_supported(cfg)
+    with pytest.raises(ValueError, match="paged"):
+        serve.Engine(cfg, slots=1, max_seq=16, cache_impl="dense",
+                     prefix_cache=True)
+
+
+def test_step_chunk_refuses_writes_into_shared_pages(cfg):
+    """The host-side guard behind the device write mask: driving the
+    engine into a shared page write trips the assertion instead of
+    corrupting the cache for other readers."""
+    eng = _engine(cfg, slots=2, prefix_cache=True)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab, size=8)
+    eng.pool.ensure_capacity(0, 8)
+    eng._slot_hash[0] = eng._prompt_hashes(prompt)
+    eng._slot_registered[0] = 0
+    toks = np.zeros((2, 8), np.int32)
+    toks[0] = prompt
+    eng.step_chunk(toks, np.zeros(2, np.int32), np.array([8, 0], np.int32))
+    eng.note_prefilled(0, 8)  # both pages published
+    # map slot 1 onto slot 0's registered page directly and try to write
+    eng.pool.share(1, [eng.pool.pages_of[0][0]])
+    bad = np.zeros((2, 1), np.int32)
+    with pytest.raises(AssertionError, match="non-exclusive"):
+        eng.step_chunk(bad, np.array([0, 0], np.int32),
+                       np.array([0, 1], np.int32))

@@ -209,8 +209,14 @@ def test_page_pool_spill_and_watermarks():
     pool = PagePool(num_pages=8, page_size=4, slots=2, max_pages_per_slot=4)
     pool.alloc(0, 3)
     assert pool.peak_used_pages == 3
-    ids = pool.spill_slot(0)
-    assert len(ids) == 3 and pool.free_pages == 7 and pool.spills == 1
+    ids, pinned = pool.spill_slot(0)
+    assert len(ids) == 3 and not pinned  # nothing registered: all exclusive
+    assert pool.free_pages == 7 and pool.spills == 1
+    # every spilled id lands on the free list exactly once (the seed pool
+    # double-added via free_slot before the prepend and filtered the
+    # duplicates back out, re-building set(ids) per element)
+    assert sorted(pool._free) == list(range(1, 8))
+    pool.assert_invariants()
     # spilled ids go to the back of the free list: a fresh alloc prefers
     # other pages, so restore lands on different physical pages
     got = pool.alloc(1, 3)
@@ -218,5 +224,6 @@ def test_page_pool_spill_and_watermarks():
     back = pool.restore_slot(0, 3)
     assert pool.restores == 1 and len(back) == 3
     assert pool.peak_used_pages == 6
+    pool.assert_invariants()
     pool.observe_step()
     assert pool.mean_utilization() == pytest.approx(6 / 7)
