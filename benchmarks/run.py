@@ -36,6 +36,9 @@ Framework:
   serve_prefix            prefix cache on vs off on a shared-system-prompt
                           Poisson stream (prefill tokens saved, hit rate,
                           tok/s, output equality) -> BENCH_4.json.
+  serve_chaos             fault-tolerant serving under chaos injection
+                          (shed/timeout counts, kill/restore recovery,
+                          survivors bit-identical) -> BENCH_5.json.
   roofline_summary        key roofline numbers from the dry-run artifacts.
 """
 import json
@@ -435,6 +438,91 @@ def serve_prefix():
          "(position-addressed write keys)")
 
 
+def serve_chaos():
+    """Fault-tolerant serving under an overload + chaos schedule.
+
+    An overloaded Poisson stream (more requests than the tight pool can
+    carry, per-request step deadlines, a bounded queue) runs through
+    ``runtime.fault.run_serving`` twice: once fault-free, once under a
+    seeded :class:`FaultPlan` that seizes pages, storms preemptions, runs
+    refcount-corruption detection drills, trips the step watchdog, and
+    kills the engine at step 12 (recovered from an every-4-steps
+    snapshot).  The headline gate is ``survivors_equal``: every request
+    that FINISHES under chaos emits tokens bit-identical to the same
+    request in the fault-free run — stochastic FP8 KV rounding ON, which
+    is exactly what the position-addressed write keys buy.  The PR-6
+    acceptance run writes BENCH_5.json:
+    ``python benchmarks/run.py serve_chaos --json=BENCH_5.json``.
+    """
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.launch import serve
+    from repro.runtime import fault
+    from repro.serving import FaultPlan
+
+    rng = np.random.default_rng(0)
+    plens = [6, 10, 4, 8, 12, 6, 4, 10]
+    gen = 8
+    queue = [rng.integers(0, 256, size=l) for l in plens]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(1.5, size=len(plens)))
+    ).astype(int)
+    cfg = get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
+
+    def make_engine():
+        # tight pool: 9 usable pages for 3 slots -> real contention
+        return serve.Engine(cfg, slots=3, max_seq=24, cache_impl="paged",
+                            page_size=4, num_pages=10, stochastic_kv=True)
+
+    # deadline sits between the fault-free completion time and the chaos
+    # run's: every request finishes clean, stragglers under chaos expire
+    knobs = dict(gen=gen, arrivals=arrivals, chunk=4, deadline_steps=26,
+                 max_queue=6, watermark_high=0.95, watermark_low=0.6,
+                 log=lambda *a: None)
+    base, base_stats = fault.run_serving(
+        make_engine, [q.copy() for q in queue], **knobs)
+    plan = FaultPlan(seed=1, pool_exhaustion=0.25, exhaustion_pages=2,
+                     exhaustion_hold=3, preemption_storm=0.15,
+                     corruption=0.15, overrun=0.2, kill_at_step=12)
+    with tempfile.TemporaryDirectory() as td:
+        out, stats = fault.run_serving(
+            make_engine, [q.copy() for q in queue], **knobs,
+            chaos=plan, ckpt_dir=td, snapshot_every=4,
+            step_deadline_s=3600.0,
+            heartbeat_path=pathlib.Path(td) / "heartbeat.json",
+        )
+    tag = "serve_chaos/qwen2-0.5b-smoke"
+    c = stats["chaos"]
+    emit(f"{tag}/tok_s", f"{stats['tok_s']:.2f}",
+         f"steps={stats['steps']} under chaos (fault-free "
+         f"{base_stats['tok_s']:.2f}) cpu", "tok/s")
+    emit(f"{tag}/finished", stats["terminal"].get("finished", 0),
+         f"of {len(queue)} requests; fault-free run finished "
+         f"{base_stats['terminal'].get('finished', 0)}")
+    emit(f"{tag}/shed_or_expired",
+         stats["terminal"].get("rejected", 0)
+         + stats["terminal"].get("timed_out", 0),
+         f"rejected={stats['terminal'].get('rejected', 0)} "
+         f"timed_out={stats['terminal'].get('timed_out', 0)} "
+         f"(deadline_steps=26 max_queue=6)")
+    emit(f"{tag}/restarts", stats["restarts"],
+         f"engine kills recovered from snapshots "
+         f"(snapshots taken={stats['snapshots']})")
+    emit(f"{tag}/faults_injected",
+         c["exhaustion"] + c["storm"] + c["corruption"] + c["overrun"]
+         + c["killed"],
+         f"exhaustion={c['exhaustion']} storm={c['storm']} "
+         f"corruption_drills={c['corruption']} overrun={c['overrun']} "
+         f"killed={c['killed']} (FaultPlan seed=1)")
+    emit(f"{tag}/preemptions", stats["preemptions"],
+         "spill/restore cycles under the tight pool + seizures")
+    survivors_equal = all(out[rid] == base[rid] for rid in out)
+    emit("serve_chaos/survivors_equal", int(survivors_equal and len(out) > 0),
+         f"{len(out)} chaos-run survivors bit-identical to the fault-free "
+         "run, stochastic KV rounding ON (position-addressed write keys)")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -460,6 +548,7 @@ BENCHES = {
     "serve_decode": serve_decode,
     "serve_continuous": serve_continuous,
     "serve_prefix": serve_prefix,
+    "serve_chaos": serve_chaos,
     "roofline_summary": roofline_summary,
 }
 

@@ -28,13 +28,16 @@ import numpy as np
 _EXEC = concurrent.futures.ThreadPoolExecutor(max_workers=1)
 
 
+def path_key(path) -> str:
+    """Canonical "/"-joined string key for one tree-path (host-count and
+    mesh independent — the checkpoint addressing scheme)."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-        )
-        flat[key] = leaf
+        flat[path_key(path)] = leaf
     return flat
 
 
@@ -129,9 +132,31 @@ def restore(
 
     # rebuild the tree in `like`'s structure
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
-    keys = [
-        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        for path, _ in paths
-    ]
+    keys = [path_key(path) for path, _ in paths]
     state = jax.tree_util.tree_unflatten(treedef, [loaded[k] for k in keys])
     return state, manifest["step"], manifest.get("data_state", {})
+
+
+def restore_raw(
+    ckpt_dir: str | pathlib.Path,
+    *,
+    step: Optional[int] = None,
+) -> tuple[Dict[str, np.ndarray], dict]:
+    """Load a checkpoint as ``({key: np.ndarray}, manifest)`` without a
+    target structure.
+
+    The schema-free path for snapshots whose tree structure is *itself*
+    recorded in ``data_state`` (the serving engine snapshot: the request
+    set, and hence the spill subtree, differs run to run) — the caller
+    reassembles whatever shape it needs from the "/"-joined keys.
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step-{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat = {key: np.load(d / meta["file"])
+            for key, meta in manifest["leaves"].items()}
+    return flat, manifest

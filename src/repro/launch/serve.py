@@ -50,6 +50,7 @@ from __future__ import annotations
 import argparse
 import hashlib
 import time
+from collections import Counter
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -60,6 +61,8 @@ from .. import numerics
 from ..configs import get_config
 from ..models import Model
 from ..serving import ContinuousScheduler, PagePool, Request
+from ..serving.page_pool import invariant_checks_enabled
+from ..serving.scheduler import CANCELLED, FINISHED, REJECTED, TIMED_OUT
 
 
 def cache_bytes(tree) -> int:
@@ -654,7 +657,11 @@ def sample(logits: np.ndarray, temperature: float, rng: np.random.Generator):
 def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
         temperature: float = 0.0, seed: int = 0, quiet: bool = False,
         scheduler: str = "bucketed", arrivals=None, chunk: int = 4,
-        on_token=None):
+        on_token=None, deadline_steps: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+        max_tokens: Optional[int] = None, max_queue: Optional[int] = None,
+        watermark_high: float = 1.0, watermark_low: float = 0.75,
+        control=None):
     """Serve ``queue`` to completion.  Returns (outputs, stats).
 
     ``scheduler``: "bucketed" (batched length-bucket prefills, worst-case
@@ -662,29 +669,62 @@ def run(eng: Engine, queue: List[np.ndarray], *, gen: int,
     cache only).  ``arrivals`` optionally gives each request's arrival step
     (Poisson-stream simulation); ``on_token(rid, token, step)`` streams
     tokens as they are sampled.
+
+    Fault isolation (both schedulers): a request that cannot be served is
+    terminated *individually* — its pages released, pool invariants intact
+    — and ``stats["statuses"]`` records every request's terminal state and
+    reason; ``outputs`` holds only FINISHED requests.  ``deadline_steps``/
+    ``deadline_s`` bound each request's scheduler-step/wall-clock budget,
+    ``max_tokens`` caps generation, ``control`` (a
+    :class:`~repro.serving.ServeControl`) cancels individual rids
+    mid-flight.  ``max_queue`` and the watermark pair add admission
+    backpressure (continuous scheduler only).
     """
     if scheduler == "continuous":
         return run_continuous(eng, queue, gen=gen, temperature=temperature,
                               seed=seed, quiet=quiet, arrivals=arrivals,
-                              chunk=chunk, on_token=on_token)
+                              chunk=chunk, on_token=on_token,
+                              deadline_steps=deadline_steps,
+                              deadline_s=deadline_s, max_tokens=max_tokens,
+                              max_queue=max_queue,
+                              watermark_high=watermark_high,
+                              watermark_low=watermark_low, control=control)
     if scheduler != "bucketed":
         raise ValueError(f"unknown scheduler {scheduler!r}")
     return run_bucketed(eng, queue, gen=gen, temperature=temperature,
                         seed=seed, quiet=quiet, arrivals=arrivals,
-                        chunk=chunk, on_token=on_token)
+                        chunk=chunk, on_token=on_token,
+                        deadline_steps=deadline_steps,
+                        deadline_s=deadline_s, max_tokens=max_tokens,
+                        control=control)
 
 
 def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
                  temperature: float = 0.0, seed: int = 0, quiet: bool = False,
-                 arrivals=None, chunk: int = 4, on_token=None):
+                 arrivals=None, chunk: int = 4, on_token=None,
+                 deadline_steps: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 max_tokens: Optional[int] = None, control=None):
     """Bucketed-admission loop over ``queue`` (the PR-2 baseline).
-    Returns (outputs, stats)."""
+    Returns (outputs, stats).
+
+    Per-request fault isolation: an oversized request (worst case bigger
+    than the whole pool or one slot's block table) is REJECTED at its
+    admission attempt — earlier admissions in the same bucket keep their
+    slots and pages — and deadline-blown (``deadline_steps`` steps or
+    ``deadline_s`` seconds from arrival) or cancelled requests release
+    their slot individually.  ``stats["statuses"]`` records every
+    request's terminal state."""
     rng = np.random.default_rng(seed)
+    if max_tokens is not None:
+        gen = min(gen, max_tokens)
     requests = len(queue)
     img_off = eng.cfg.n_img_tokens if eng.cfg.family == "vlm" else 0
     active: Dict[int, dict] = {}
     reserved: Dict[int, int] = {}  # slot -> worst-case page reservation
     outputs: Dict[int, list] = {}
+    statuses: Dict[int, tuple] = {}  # rid -> (terminal state, reason)
+    terminal = Counter()
     next_req = 0
     t0 = time.time()
     steps = 0
@@ -692,7 +732,34 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
     occupied_slot_steps = 0
     prefix_hit_tokens = 0
 
-    while len(outputs) < requests:
+    def finish(rid: int, state: str, reason: str = "") -> None:
+        statuses[rid] = (state, reason)
+        terminal[state] += 1
+
+    def arrival_of(rid: int) -> int:
+        return 0 if arrivals is None else int(arrivals[rid])
+
+    def expired(rid: int) -> Optional[str]:
+        if control is not None and control.cancelled(rid):
+            return CANCELLED
+        if (deadline_steps is not None
+                and steps - arrival_of(rid) >= deadline_steps):
+            return TIMED_OUT
+        if deadline_s is not None and time.time() - t0 > deadline_s:
+            return TIMED_OUT
+        return None
+
+    while len(statuses) < requests:
+        # ---- deadline/cancellation sweep over the active slots -------- #
+        for slot, st in list(active.items()):
+            state = expired(st["rid"])
+            if state is not None:
+                finish(st["rid"], state,
+                       "cancelled by client" if state == CANCELLED
+                       else "deadline exhausted")
+                del active[slot]
+                reserved.pop(slot, None)
+                eng.release(slot)
         # ---- batched admission into every free slot ------------------- #
         # Admission control reserves each request's worst-case page count
         # (prompt + full generation budget) so decode can never exhaust the
@@ -707,22 +774,48 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         admit_slots, admit_prompts, admit_rids = [], [], []
         chunked_admissions = []  # (slot, rid, prompt, n_cached)
         for slot in range(eng.slots):
-            if slot in active or next_req >= requests:
+            if slot in active:
                 continue
+            # Drain terminal queue heads before admitting into this slot:
+            # already-cancelled/expired requests, and requests whose worst
+            # case cannot fit an EMPTY pool (or one slot's block table) —
+            # each is terminated *individually*, holding no slot or pages,
+            # instead of crashing the run with earlier admissions' pages
+            # already taken.
+            while next_req < requests:
+                if arrivals is not None and arrivals[next_req] > steps:
+                    break  # FIFO: the next request has not arrived yet
+                state = expired(next_req)
+                if state is not None:
+                    finish(next_req, state,
+                           "cancelled by client" if state == CANCELLED
+                           else "deadline exhausted before admission")
+                    next_req += 1
+                    continue
+                if eng.pool is not None:
+                    worst = eng.pool.pages_needed(
+                        queue[next_req].shape[0] + img_off + gen
+                    )
+                    usable = min(eng.pool.num_pages - 1,
+                                 eng.pool.max_pages_per_slot)
+                    if worst > usable:
+                        finish(next_req, REJECTED,
+                               f"needs {worst} pages but the pool serves "
+                               f"at most {usable} per request; raise "
+                               f"--pages or lower --gen/--prompt-len")
+                        next_req += 1
+                        if invariant_checks_enabled():
+                            eng.pool.assert_invariants()
+                        continue
+                break
+            if next_req >= requests:
+                break
             if arrivals is not None and arrivals[next_req] > steps:
                 break  # FIFO: the next request has not arrived yet
             prompt = queue[next_req]
             if eng.pool is not None:
                 worst = eng.pool.pages_needed(prompt.shape[0] + img_off + gen)
                 if sum(reserved.values()) + worst > eng.pool.num_pages - 1:
-                    if not active and not admit_slots and not chunked_admissions:
-                        # nothing in flight will ever free pages: this
-                        # request can never fit -> fail instead of spinning
-                        raise RuntimeError(
-                            f"request {next_req} needs {worst} pages but the "
-                            f"pool has only {eng.pool.num_pages - 1}; raise "
-                            "--pages or lower --gen/--prompt-len"
-                        )
                     break  # wait for in-flight requests to free pages
                 reserved[slot] = worst
             n_cached = eng.admit_prefix(slot, prompt)
@@ -796,11 +889,14 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
                 on_token(st["rid"], st["last"], steps)
             if len(st["out"]) >= gen:
                 outputs[st["rid"]] = st["out"]
+                finish(st["rid"], FINISHED)
                 done.append(slot)
         for slot in done:
             del active[slot]
             reserved.pop(slot, None)
             eng.release(slot)
+        if invariant_checks_enabled() and eng.pool is not None:
+            eng.pool.assert_invariants()
 
     dt = time.time() - t0
     stats = dict(
@@ -808,6 +904,9 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         tok_s=decoded_tokens / dt if dt > 0 else 0.0,
         slot_occupancy=occupied_slot_steps / max(steps * eng.slots, 1),
         preemptions=0,
+        shed=0,
+        terminal=dict(terminal),
+        statuses=statuses,
         prefix_hit_tokens=prefix_hit_tokens,
         cache_bytes=eng.kv_cache_bytes(),
         cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
@@ -827,10 +926,16 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
 def run_continuous(eng: Engine, queue: List[np.ndarray], *, gen: int,
                    temperature: float = 0.0, seed: int = 0,
                    quiet: bool = False, arrivals=None, chunk: int = 4,
-                   on_token=None):
+                   on_token=None, deadline_steps: Optional[int] = None,
+                   deadline_s: Optional[float] = None,
+                   max_tokens: Optional[int] = None,
+                   max_queue: Optional[int] = None,
+                   watermark_high: float = 1.0, watermark_low: float = 0.75,
+                   control=None):
     """Continuous-batching loop: chunked prefill, mid-flight joins,
     preemption with page spill/restore, per-step streaming.  Returns
-    (outputs, stats)."""
+    (outputs, stats); the lifecycle/backpressure kwargs are documented on
+    :func:`run`."""
     if eng.cache_impl != "paged":
         raise ValueError(
             "the continuous scheduler drives the paged engine; rerun with "
@@ -848,11 +953,15 @@ def run_continuous(eng: Engine, queue: List[np.ndarray], *, gen: int,
         return int(sample(row[None], temperature, rng)[0])
 
     sched = ContinuousScheduler(eng, chunk=chunk, sample=sample_row,
-                                on_token=on_token)
+                                on_token=on_token, control=control,
+                                max_tokens=max_tokens, max_queue=max_queue,
+                                watermark_high=watermark_high,
+                                watermark_low=watermark_low)
     for i, prompt in enumerate(queue):
         sched.add(Request(
             rid=i, prompt=np.asarray(prompt), gen=gen,
             arrival=0 if arrivals is None else int(arrivals[i]),
+            deadline_steps=deadline_steps, deadline_s=deadline_s,
         ))
     t0 = time.time()
     outputs = sched.run()
@@ -866,6 +975,10 @@ def run_continuous(eng: Engine, queue: List[np.ndarray], *, gen: int,
         slot_occupancy=sched.occupied_slot_steps / max(sched.steps * eng.slots, 1),
         mean_latency_steps=sched.mean_latency_steps(),
         preemptions=sched.preemptions,
+        shed=sched.shed,
+        admission_pauses=sched.admission_pauses,
+        terminal=dict(sched.terminal_counts),
+        statuses=sched.statuses(),
         page_utilization=eng.pool.mean_utilization(),
         cache_bytes=eng.kv_cache_bytes(),
         cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
@@ -928,6 +1041,22 @@ def main(argv=None):
                     help="print each token the step it is sampled")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request scheduler-step budget from arrival "
+                         "(0 = unbounded); blown deadlines time the "
+                         "request out individually")
+    ap.add_argument("--max-tokens", type=int, default=0,
+                    help="hard cap on any request's generation budget "
+                         "(0 = uncapped)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on arrived-but-unadmitted requests; "
+                         "overflow is load-shed (continuous scheduler; "
+                         "0 = unbounded)")
+    ap.add_argument("--watermark-high", type=float, default=1.0,
+                    help="page-pool occupancy fraction that pauses new "
+                         "admissions (continuous scheduler)")
+    ap.add_argument("--watermark-low", type=float, default=0.75,
+                    help="occupancy fraction that resumes admissions")
     args = ap.parse_args(argv)
 
     if args.policy is not None:
@@ -980,12 +1109,20 @@ def main(argv=None):
     if args.stream:
         def on_token(rid, tok, step):
             print(f"  step{step:4d} req{rid}: {tok}")
-    outputs, _ = run(eng, queue, gen=args.gen,
-                     temperature=args.temperature, seed=args.seed,
-                     scheduler=args.scheduler, arrivals=arrivals,
-                     chunk=args.chunk, on_token=on_token)
+    outputs, stats = run(eng, queue, gen=args.gen,
+                         temperature=args.temperature, seed=args.seed,
+                         scheduler=args.scheduler, arrivals=arrivals,
+                         chunk=args.chunk, on_token=on_token,
+                         deadline_steps=args.deadline_steps or None,
+                         max_tokens=args.max_tokens or None,
+                         max_queue=args.max_queue or None,
+                         watermark_high=args.watermark_high,
+                         watermark_low=args.watermark_low)
     for rid in sorted(outputs):
         print(f"  req{rid}: {outputs[rid][:10]}...")
+    for rid, (state, reason) in sorted(stats.get("statuses", {}).items()):
+        if state != "finished":
+            print(f"  req{rid}: {state} ({reason})")
     return outputs
 
 

@@ -1,4 +1,4 @@
-"""Fault tolerance: watchdog, heartbeat, checkpoint-restart training loop.
+"""Fault tolerance: watchdog, heartbeat, checkpoint-restart loops.
 
 Cluster model (1000+ nodes): an external orchestrator restarts failed jobs;
 inside the job we provide
@@ -7,13 +7,21 @@ inside the job we provide
     the slow host and restart on the survivors — elastic restore handles
     the new mesh),
   * a heartbeat file (step + wallclock) the orchestrator monitors,
-  * ``run_training``: the crash-safe loop — periodic async checkpoints,
-    automatic restore-and-continue after a failure (here exercised by
-    injected faults in tests; on a cluster, by process restart).
+  * ``run_training``: the crash-safe training loop — periodic async
+    checkpoints, automatic restore-and-continue after a failure (here
+    exercised by injected faults in tests; on a cluster, by process
+    restart),
+  * ``run_serving``: the same discipline wrapped around the serving
+    engine — per-step heartbeats with scheduler stats, periodic
+    crash-recovery snapshots (``serving.snapshot``), watchdog overruns
+    survived as degraded service, and automatic engine rebuild + restore
+    after a (simulated or real) kill.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import os
 import pathlib
 import time
 from typing import Callable, Optional
@@ -45,12 +53,28 @@ class StepWatchdog:
             )
         self._t0 = None
 
+    def inject_overrun(self) -> bool:
+        """Chaos hook: rewind the in-flight step's start time so the next
+        ``check()`` trips the deadline.  Returns True iff a step was in
+        flight (``start()`` called, ``check()`` not yet)."""
+        if self._t0 is None:
+            return False
+        self._t0 -= self.deadline_s + 1.0
+        return True
+
 
 def write_heartbeat(path: pathlib.Path, step: int, extra: dict | None = None):
+    """Atomically (re)write the heartbeat file: write + fsync a temp file,
+    then ``os.replace`` over the target — an orchestrator polling the path
+    never observes a torn or empty heartbeat, on any platform."""
+    path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     tmp = path.with_suffix(".tmp")
-    tmp.write_text(json.dumps({"step": step, "t": time.time(), **(extra or {})}))
-    tmp.rename(path)
+    with open(tmp, "w") as f:
+        f.write(json.dumps({"step": step, "t": time.time(), **(extra or {})}))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def run_training(
@@ -130,3 +154,179 @@ def run_training(
     if pending is not None:
         pending.result()
     return state, history
+
+
+def run_serving(
+    make_engine: Callable,
+    queue,
+    *,
+    gen: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+    arrivals=None,
+    chunk: int = 4,
+    on_token: Optional[Callable] = None,
+    deadline_steps: Optional[int] = None,
+    deadline_s: Optional[float] = None,
+    max_tokens: Optional[int] = None,
+    max_queue: Optional[int] = None,
+    watermark_high: float = 1.0,
+    watermark_low: float = 0.75,
+    control=None,
+    chaos=None,
+    ckpt_dir: str | pathlib.Path | None = None,
+    snapshot_every: int = 0,
+    resume: bool = False,
+    heartbeat_path: str | pathlib.Path | None = None,
+    heartbeat_every: int = 1,
+    step_deadline_s: Optional[float] = None,
+    max_restarts: int = 3,
+    log: Callable = print,
+):
+    """Crash-safe serving loop: ``run_training``'s discipline around the
+    continuous-batching engine.  Returns (outputs, stats).
+
+    ``make_engine`` builds a fresh ``launch.serve.Engine`` (called again
+    after every kill — a crashed engine's device state is garbage by
+    definition); ``queue`` is the prompt list.  Per-request deadlines,
+    caps and backpressure knobs pass straight to the scheduler; ``chaos``
+    is an optional :class:`~repro.serving.chaos.FaultPlan`.
+
+    Fault handling per step:
+
+    * ``TimeoutError`` from the :class:`StepWatchdog` (a straggling or
+      chaos-overrun step): counted and survived — the step's work is
+      already committed, so service degrades instead of dying (on a
+      cluster this also flags the host for eviction).
+    * ``EngineKilled`` (chaos kill, standing in for a real crash): the
+      engine and scheduler are rebuilt and the latest snapshot under
+      ``ckpt_dir`` restored — survivors resume mid-stream with remaining
+      tokens bit-identical to an uninterrupted run (position-addressed KV
+      rounding).  With no snapshot on disk the whole request stream is
+      re-seeded cold (tokens already streamed via ``on_token`` repeat).
+
+    ``snapshot_every > 0`` (with ``ckpt_dir``) snapshots the full serving
+    state every N scheduler steps; ``resume=True`` restores the latest
+    snapshot at startup instead of seeding ``queue`` (process-level
+    restart).  Heartbeats carry per-step scheduler stats for an external
+    orchestrator.
+    """
+    from ..launch.serve import sample as _sample
+    from ..serving import (
+        ChaosHarness,
+        ContinuousScheduler,
+        EngineKilled,
+        Request,
+        load_snapshot,
+        save_snapshot,
+    )
+
+    if ckpt_dir is not None:
+        ckpt_dir = pathlib.Path(ckpt_dir)
+        if heartbeat_path is None:
+            heartbeat_path = ckpt_dir / "heartbeat.json"
+    rng = np.random.default_rng(seed)
+
+    def sample_row(row: np.ndarray) -> int:
+        return int(_sample(row[None], temperature, rng)[0])
+
+    def build():
+        eng = make_engine()
+        sched = ContinuousScheduler(
+            eng, chunk=chunk, sample=sample_row, on_token=on_token,
+            control=control, max_tokens=max_tokens, max_queue=max_queue,
+            watermark_high=watermark_high, watermark_low=watermark_low,
+        )
+        return eng, sched
+
+    def seed_requests(sched):
+        for i, prompt in enumerate(queue):
+            sched.add(Request(
+                rid=i, prompt=np.asarray(prompt), gen=gen,
+                arrival=0 if arrivals is None else int(arrivals[i]),
+                deadline_steps=deadline_steps, deadline_s=deadline_s,
+            ))
+
+    eng, sched = build()
+    restored_from = None
+    if resume and ckpt_dir is not None and store.latest_step(ckpt_dir) is not None:
+        restored_from = load_snapshot(ckpt_dir, eng, sched, sampler_rng=rng)
+        log(f"[serve:fault] resumed from snapshot at step {restored_from}")
+    else:
+        seed_requests(sched)
+
+    watchdog = StepWatchdog(step_deadline_s) if step_deadline_s else None
+    harness = ChaosHarness(sched, chaos, watchdog) if chaos is not None else None
+    restarts = 0
+    overruns = 0
+    snapshots = 0
+    t0 = time.time()
+    while sched.pending():
+        try:
+            if watchdog is not None:
+                watchdog.start()
+            (harness if harness is not None else sched).step()
+            if watchdog is not None:
+                watchdog.check()
+        except TimeoutError as e:
+            # the overrun step's work is already committed: degrade, don't
+            # die (a real deployment would also flag this host)
+            overruns += 1
+            log(f"[serve:fault] step {sched.steps} overran: {e}")
+        except EngineKilled as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log(f"[serve:fault] {e}; rebuilding engine "
+                f"(restart {restarts}/{max_restarts})")
+            if chaos is not None:
+                # the kill fired; the rebuilt engine must not re-die at the
+                # same step or recovery would never complete
+                chaos = dataclasses.replace(chaos, kill_at_step=None)
+            eng, sched = build()
+            if ckpt_dir is not None and store.latest_step(ckpt_dir) is not None:
+                step = load_snapshot(ckpt_dir, eng, sched, sampler_rng=rng)
+                log(f"[serve:fault] restored snapshot at step {step}")
+            else:
+                rng = np.random.default_rng(seed)  # cold restart: replay
+                seed_requests(sched)
+            if harness is not None:
+                counts = harness.counts  # survive the rebuild
+                harness = ChaosHarness(sched, chaos, watchdog)
+                harness.counts = counts
+            continue
+        if (heartbeat_path is not None
+                and sched.steps % max(heartbeat_every, 1) == 0):
+            write_heartbeat(pathlib.Path(heartbeat_path), sched.steps, extra={
+                "active": len(sched.active),
+                "queued": len(sched.queued),
+                "preempted": len(sched.preempted),
+                "finished": len(sched.finished),
+                "decoded_tokens": sched.decoded_tokens,
+                "preemptions": sched.preemptions,
+                "free_pages": sched.pool.free_pages,
+            })
+        if (ckpt_dir is not None and snapshot_every > 0
+                and sched.steps % snapshot_every == 0 and sched.pending()):
+            save_snapshot(
+                ckpt_dir, eng, sched,
+                sampler_rng=rng if temperature > 0 else None,
+            )
+            snapshots += 1
+    if harness is not None:
+        harness.release_all_seizures()
+    dt = time.time() - t0
+    stats = dict(
+        steps=sched.steps, wall_s=dt,
+        tok_s=sched.decoded_tokens / dt if dt > 0 else 0.0,
+        preemptions=sched.preemptions,
+        shed=sched.shed,
+        terminal=dict(sched.terminal_counts),
+        statuses=sched.statuses(),
+        restarts=restarts,
+        watchdog_overruns=overruns,
+        snapshots=snapshots,
+        restored_from=restored_from,
+        chaos=dict(harness.counts) if harness is not None else None,
+    )
+    return sched.outputs, stats

@@ -4,30 +4,60 @@
 refcounts, the prefix-cache index with LRU eviction and copy-on-write
 pages, plus device write helpers); ``kernels.paged_attention`` consumes
 the paged layout; ``scheduler`` is the continuous-batching
-admission/preemption state machine with prefix-cache-aware admission; the
-``Engine`` in ``launch.serve`` executes its decisions (mixed
-prefill+decode steps, prefix matching/registration, page spills/restores,
-eviction).
+admission/preemption state machine with prefix-cache-aware admission,
+per-request terminal states (rejection, deadlines, cancellation) and
+admission backpressure; the ``Engine`` in ``launch.serve`` executes its
+decisions (mixed prefill+decode steps, prefix matching/registration, page
+spills/restores, eviction).  ``chaos`` injects deterministic faults
+(exhaustion, preemption storms, corruption drills, kills) and
+``snapshot`` makes the whole serving state crash-recoverable through the
+checkpoint store.
 """
+from .chaos import ChaosHarness, EngineKilled, FaultPlan
 from .page_pool import (
     PagePool,
     encode_kv,
+    invariant_checks_enabled,
     page_qtensor,
     pow2_page_scale,
     rescale_codes,
     write_prefill_pages,
     write_token_page,
 )
-from .scheduler import ContinuousScheduler, Request
+from .scheduler import (
+    CANCELLED,
+    FAILED,
+    FINISHED,
+    REJECTED,
+    TERMINAL_STATES,
+    TIMED_OUT,
+    ContinuousScheduler,
+    Request,
+    ServeControl,
+)
+from .snapshot import load_snapshot, save_snapshot
 
 __all__ = [
+    "CANCELLED",
+    "ChaosHarness",
     "ContinuousScheduler",
+    "EngineKilled",
+    "FAILED",
+    "FINISHED",
+    "FaultPlan",
     "PagePool",
+    "REJECTED",
     "Request",
+    "ServeControl",
+    "TERMINAL_STATES",
+    "TIMED_OUT",
     "encode_kv",
+    "invariant_checks_enabled",
+    "load_snapshot",
     "page_qtensor",
     "pow2_page_scale",
     "rescale_codes",
+    "save_snapshot",
     "write_prefill_pages",
     "write_token_page",
 ]

@@ -18,11 +18,12 @@ block table indexes every layer's page arrays), exactly the vLLM layout.
 Ownership model (the prefix-cache PR changed this from exclusive to
 shared):
 
-  * every non-null page is in exactly one of four states — on the **free
+  * every non-null page is in exactly one of five states — on the **free
     list**, **referenced** by one or more slots (``ref[pid]`` block-table
     references), parked in the **prefix-cache LRU** (registered content,
-    ``ref == 0``, evictable), or **pinned** by a preemption spill record
-    (see :meth:`spill_slot`);
+    ``ref == 0``, evictable), **pinned** by a preemption spill record
+    (see :meth:`spill_slot`), or transiently **seized** by the chaos
+    harness (:meth:`seize`, a simulated external memory squeeze);
   * a page is only ever *written* by a slot that owns it exclusively
     (``ref == 1`` and not registered).  Full prompt pages get registered
     in the prefix index and may then be mapped read-only into other slots
@@ -49,6 +50,7 @@ plain numpy/python (it runs on the host between decode steps).
 """
 from __future__ import annotations
 
+import os
 from collections import Counter, OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -64,6 +66,7 @@ from ..kernels.common import code_to_f32
 
 __all__ = [
     "PagePool",
+    "invariant_checks_enabled",
     "page_qtensor",
     "pow2_page_scale",
     "encode_kv",
@@ -71,6 +74,15 @@ __all__ = [
     "write_token_page",
     "write_prefill_pages",
 ]
+
+
+def invariant_checks_enabled() -> bool:
+    """True when ``REPRO_CHECK_INVARIANTS=1`` is set in the environment:
+    both schedulers then run :meth:`PagePool.assert_invariants` after every
+    step, so any pool-state corruption (a bug, or an injected chaos fault)
+    is caught at the step that introduced it rather than steps later as a
+    wrong token.  Wired on in the CI serve-smoke and chaos-smoke jobs."""
+    return os.environ.get("REPRO_CHECK_INVARIANTS") == "1"
 
 
 # --------------------------------------------------------------------------- #
@@ -104,6 +116,7 @@ class PagePool:
         self._page_key: Dict[int, str] = {}
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self._pinned: Dict[int, int] = {}  # page id -> spill-record pins
+        self._seized: set = set()  # chaos-harness transient seizures
         # watermark / churn accounting (read by the scheduler and benches)
         self.peak_used_pages = 0
         self.used_page_steps = 0  # sum over observe_step() of used_pages
@@ -364,6 +377,97 @@ class PagePool:
         self.restores += 1
         return fresh
 
+    def unpin(self, pinned: Sequence[Tuple[int, int]]) -> None:
+        """Drop a discarded spill record's pins — the preempted request
+        reached a terminal state and will never restore.  A page whose last
+        pin drops with ``ref == 0`` parks in the LRU: it is registered
+        prefix content, still servable as a hit and evictable on demand."""
+        for _, pid in pinned:
+            pins = self._pinned.get(pid, 0)
+            assert pins > 0, f"unpin of unpinned page {pid}"
+            if pins > 1:
+                self._pinned[pid] = pins - 1
+                continue
+            del self._pinned[pid]
+            if self.ref[pid] == 0:
+                self._lru[pid] = None
+
+    # ------------------------------------------------------------------ #
+    # Chaos hooks + snapshot state
+    # ------------------------------------------------------------------ #
+    def seize(self, n: int) -> List[int]:
+        """Chaos hook: take up to ``n`` pages off the free list (never out
+        of the prefix-cache LRU — a simulated external memory squeeze must
+        not silently evict cached content), making them unallocatable until
+        :meth:`release_seized`.  Returns the seized ids."""
+        ids = [self._free.pop() for _ in range(min(n, len(self._free)))]
+        self._seized.update(ids)
+        return ids
+
+    def release_seized(self, ids: Sequence[int]) -> None:
+        """Return chaos-seized pages to the free list."""
+        for pid in ids:
+            assert pid in self._seized, f"page {pid} was not seized"
+            self._seized.discard(pid)
+            self._free.append(pid)
+
+    def state_dict(self) -> dict:
+        """JSON-serializable allocator state for crash snapshots.
+
+        Chaos seizures are transient *faults*, not engine state: seized
+        pages are recorded as free, so a restored engine starts with the
+        seizure released."""
+        return {
+            "geometry": [self.num_pages, self.page_size, self.slots,
+                         self.max_pages_per_slot],
+            "free": [int(p) for p in self._free] + sorted(
+                int(p) for p in self._seized),
+            "ref": [int(r) for r in self.ref],
+            "pages_of": [[int(p) for p in lst] for lst in self.pages_of],
+            "index": dict(self._index),
+            "lru": [int(p) for p in self._lru],
+            "pinned": {str(pid): int(pins)
+                       for pid, pins in self._pinned.items()},
+            "counters": {
+                "peak_used_pages": self.peak_used_pages,
+                "used_page_steps": self.used_page_steps,
+                "observed_steps": self.observed_steps,
+                "spills": self.spills,
+                "restores": self.restores,
+                "prefix_lookups": self.prefix_lookups,
+                "prefix_hits": self.prefix_hits,
+                "evictions": self.evictions,
+                "cow_copies": self.cow_copies,
+            },
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore allocator state saved by :meth:`state_dict` into a pool
+        of identical geometry; verifies the full invariant set after."""
+        geo = [self.num_pages, self.page_size, self.slots,
+               self.max_pages_per_slot]
+        if list(state["geometry"]) != geo:
+            raise ValueError(
+                f"pool geometry mismatch: snapshot {state['geometry']} "
+                f"vs engine {geo}"
+            )
+        self._free = [int(p) for p in state["free"]]
+        self.ref = np.asarray(state["ref"], np.int32)
+        self.pages_of = [[int(p) for p in lst] for lst in state["pages_of"]]
+        self.block_tables = np.zeros(
+            (self.slots, self.max_pages_per_slot), np.int32)
+        for slot, owned in enumerate(self.pages_of):
+            self.block_tables[slot, :len(owned)] = owned
+        self._index = dict(state["index"])
+        self._page_key = {pid: key for key, pid in self._index.items()}
+        self._lru = OrderedDict((int(p), None) for p in state["lru"])
+        self._pinned = {int(pid): int(pins)
+                        for pid, pins in state["pinned"].items()}
+        self._seized = set()
+        for name, val in state["counters"].items():
+            setattr(self, name, val)
+        self.assert_invariants()
+
     def ensure_capacity(self, slot: int, n_tokens: int) -> None:
         """Allocate pages so ``slot`` can hold ``n_tokens`` tokens."""
         need = self.pages_needed(n_tokens) - len(self.pages_of[slot])
@@ -380,8 +484,10 @@ class PagePool:
     # ------------------------------------------------------------------ #
     def assert_invariants(self) -> None:
         """Every non-null page id is in exactly one of: the free list,
-        referenced by ≥1 slot, the prefix-cache LRU, or pinned by a spill
-        record — and all the cross-maps agree.  Test/debug helper."""
+        referenced by ≥1 slot, the prefix-cache LRU, pinned by a spill
+        record, or chaos-seized — and all the cross-maps agree.
+        Test/debug helper; gated into every scheduler step by
+        ``REPRO_CHECK_INVARIANTS=1`` (:func:`invariant_checks_enabled`)."""
         free_set = set(self._free)
         assert len(free_set) == len(self._free), "duplicate ids in free list"
         owners = Counter()
@@ -393,10 +499,11 @@ class PagePool:
                 pid in free_set,
                 self.ref[pid] > 0 or self._pinned.get(pid, 0) > 0,
                 pid in self._lru,
+                pid in self._seized,
             )
             assert sum(states) == 1, (
                 f"page {pid}: free={states[0]} held={states[1]} "
-                f"lru={states[2]} (ref={self.ref[pid]}, "
+                f"lru={states[2]} seized={states[3]} (ref={self.ref[pid]}, "
                 f"pins={self._pinned.get(pid, 0)})"
             )
             assert self.ref[pid] == owners[pid], (

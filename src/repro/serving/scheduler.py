@@ -21,18 +21,32 @@ busy every step:
     request parked.  Restore re-allocates pages and scatters the saved
     codes back — bit-identical, never re-quantized, so a preempted request
     resumes exactly where it left off.  The oldest active request is never
-    preempted, which guarantees forward progress.
+    preempted while others can be, which guarantees forward progress.
   * **Streaming.**  Each sampled token is surfaced through ``on_token`` the
     step it is produced.
 
-Request lifecycle::
+Request lifecycle (**fault isolation**: every request reaches exactly one
+terminal state; a request that cannot be served is terminated individually
+— pages released, pool invariants intact — and never takes the run down)::
 
-    QUEUED --admit--> PREFILL --last chunk--> DECODE --gen tokens--> DONE
-                        ^  \\                  ^  \\
-                        |   +--pool dry-------+   |
-                        +------- PREEMPTED <------+
-                                 (spilled; resumes with restored pages)
+    QUEUED --admit--> PREFILL --last chunk--> DECODE --gen--> FINISHED
+       |                ^  \\                  ^  \\
+       |                |   +--pool dry-------+   |
+       |                +------- PREEMPTED <------+
+       |                         (spilled; resumes with restored pages)
+       |
+       +--> REJECTED   (oversized for the pool, or load-shed off a full
+       |                bounded queue)
+       +--> TIMED_OUT  (per-request step budget / wall-clock deadline)
+       +--> CANCELLED  (``cancel(rid)`` or a ``ServeControl`` handle)
+       +--> FAILED     (grew past the pool mid-flight, resume impossible,
+                        or the engine stalled with no forward progress)
 
+  * **Backpressure.**  ``max_queue`` bounds the arrived-but-unadmitted
+    queue: overflow is load-shed (REJECTED) newest-first.  Page-pool
+    **watermarks** pause new admissions when occupancy crosses
+    ``watermark_high`` and resume below ``watermark_low`` — hysteresis
+    that sheds load *before* ``_fit`` must thrash preemptions.
   * **Prefix-cache admission.**  When the engine's prefix cache is on,
     admission matches each queued prompt's longest cached page-prefix
     (``Engine.prefix_plan`` / ``admit_prefix``): matched pages are mapped
@@ -50,18 +64,50 @@ needs ``slots``, ``pool``, ``step_chunk``, ``preempt_slot``,
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import Counter
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["Request", "ContinuousScheduler",
-           "QUEUED", "PREFILL", "DECODE", "PREEMPTED", "DONE"]
+from .page_pool import invariant_checks_enabled
 
+__all__ = ["Request", "ContinuousScheduler", "ServeControl",
+           "QUEUED", "PREFILL", "DECODE", "PREEMPTED",
+           "FINISHED", "REJECTED", "TIMED_OUT", "CANCELLED", "FAILED",
+           "TERMINAL_STATES", "DONE"]
+
+# live states
 QUEUED = "queued"
 PREFILL = "prefill"
 DECODE = "decode"
 PREEMPTED = "preempted"
-DONE = "done"
+# terminal states (per-request fault isolation)
+FINISHED = "finished"
+REJECTED = "rejected"
+TIMED_OUT = "timed_out"
+CANCELLED = "cancelled"
+FAILED = "failed"
+DONE = FINISHED  # pre-fault-tolerance alias
+TERMINAL_STATES = frozenset({FINISHED, REJECTED, TIMED_OUT, CANCELLED, FAILED})
+
+
+class ServeControl:
+    """Cancellation handle shared by caller and serving loop.
+
+    ``cancel(rid)`` may be called from an ``on_token`` callback or any
+    other thread; both schedulers poll it every step and terminate the
+    request (state CANCELLED), releasing its pages.  Cancelling an unknown
+    or already-terminal rid is a no-op."""
+
+    def __init__(self):
+        self._cancelled = set()
+
+    def cancel(self, rid: int) -> None:
+        self._cancelled.add(rid)
+
+    def cancelled(self, rid: int) -> bool:
+        return rid in self._cancelled
 
 
 @dataclasses.dataclass
@@ -85,6 +131,11 @@ class Request:
     prefix_hashes: Optional[List[str]] = None
     preemptions: int = 0
     finished_step: int = -1  # -> per-request latency in the run stats
+    # --- per-request fault-tolerance budget/bookkeeping ------------------ #
+    deadline_steps: Optional[int] = None  # scheduler-step budget from arrival
+    deadline_s: Optional[float] = None  # wall-clock budget from add()
+    finish_reason: str = ""  # why the terminal state was reached
+    t_added: float = -1.0  # scheduler clock at add() (deadline_s anchor)
 
     @property
     def plen(self) -> int:
@@ -110,11 +161,37 @@ class ContinuousScheduler:
 
     ``sample`` maps one logits row (np.ndarray [vocab]) to a token id;
     ``on_token(rid, token, step)`` streams tokens out as they are produced.
+
+    Fault-tolerance knobs:
+
+    * ``control``: a :class:`ServeControl`; cancelled rids are terminated
+      (CANCELLED) at the next step.
+    * ``max_tokens``: hard cap on any request's generation budget
+      (``req.gen`` is clamped at :meth:`add`).
+    * ``max_queue``: bound on *arrived* queued requests; overflow is
+      load-shed newest-first (REJECTED, counted in ``self.shed``).
+    * ``watermark_high`` / ``watermark_low``: page-pool occupancy
+      fractions.  Crossing high pauses *new* admissions (resumes are
+      unaffected) until occupancy falls below low — hysteresis so
+      admission stops before ``_fit`` must thrash preemptions.
+    * ``stall_limit``: steps with zero slots active and zero forward
+      progress after which the blocking request is FAILED (livelock
+      breaker: e.g. a spilled request whose pages can never be
+      re-allocated because of external seizures/pins).
+    * ``clock``: injectable wall-clock (``deadline_s``; chaos tests fake
+      it).
     """
 
     def __init__(self, eng, *, chunk: int = 4,
                  sample: Optional[Callable[[np.ndarray], int]] = None,
-                 on_token: Optional[Callable[[int, int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int, int], None]] = None,
+                 control: Optional[ServeControl] = None,
+                 max_tokens: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 watermark_high: float = 1.0,
+                 watermark_low: float = 0.75,
+                 stall_limit: int = 256,
+                 clock: Callable[[], float] = time.monotonic):
         self.eng = eng
         self.pool = eng.pool
         self.chunk = max(1, int(chunk))
@@ -122,11 +199,19 @@ class ContinuousScheduler:
             lambda row: int(np.argmax(row))
         )
         self.on_token = on_token
+        self.control = control
+        self.max_tokens = max_tokens
+        self.max_queue = max_queue
+        self.watermark_high = float(watermark_high)
+        self.watermark_low = float(watermark_low)
+        self.stall_limit = int(stall_limit)
+        self.clock = clock
         self.queued: List[Request] = []
         self.preempted: List[Request] = []
         self.active: Dict[int, Request] = {}
-        self.finished: List[Request] = []
-        self.outputs: Dict[int, List[int]] = {}
+        self.finished: List[Request] = []  # every TERMINAL request, any state
+        self.outputs: Dict[int, List[int]] = {}  # FINISHED requests only
+        self.by_rid: Dict[int, Request] = {}
         # stats
         self.steps = 0
         self.decoded_tokens = 0
@@ -134,13 +219,99 @@ class ContinuousScheduler:
         self.prefix_hit_tokens = 0  # prompt tokens served from the cache
         self.occupied_slot_steps = 0
         self.preemptions = 0
+        self.shed = 0  # load-shed adds (bounded-queue overflow)
+        self.admission_pauses = 0  # watermark-high crossings
+        self.terminal_counts: Counter = Counter()
+        self._paused = False  # watermark admission pause (hysteresis)
+        self._last_progress = 0  # last step a token was committed / admitted
 
     # ------------------------------------------------------------------ #
     def add(self, req: Request) -> None:
+        req.t_added = self.clock()
+        if self.max_tokens is not None and req.gen > self.max_tokens:
+            req.gen = self.max_tokens
+        self.by_rid[req.rid] = req
         self.queued.append(req)
 
     def pending(self) -> bool:
         return bool(self.queued or self.preempted or self.active)
+
+    def statuses(self) -> Dict[int, tuple]:
+        """rid -> (state, finish_reason) for every request ever added."""
+        return {rid: (r.state, r.finish_reason)
+                for rid, r in self.by_rid.items()}
+
+    # ------------------------------------------------------------------ #
+    # Terminal transitions: every path out of the live set goes through
+    # _terminate, which releases whatever the request holds (slot pages,
+    # spill pins) so pool invariants survive any individual failure.
+    # ------------------------------------------------------------------ #
+    def _finalize(self, req: Request, state: str, reason: str) -> None:
+        req.state = state
+        req.finish_reason = reason
+        req.finished_step = self.steps
+        self.finished.append(req)
+        self.terminal_counts[state] += 1
+        if state == FINISHED:
+            self.outputs[req.rid] = req.out
+
+    def _drop_spill(self, req: Request) -> None:
+        if req.spill is not None:
+            self.pool.unpin(req.spill.get("pinned", ()))
+            req.spill = None
+
+    def _terminate(self, req: Request, state: str, reason: str = "") -> None:
+        if req.state in TERMINAL_STATES:
+            return
+        if req.slot >= 0 and self.active.get(req.slot) is req:
+            self.eng.release(req.slot)
+            del self.active[req.slot]
+            req.slot = -1
+        elif req in self.preempted:
+            self.preempted.remove(req)
+            self._drop_spill(req)
+        elif req in self.queued:
+            self.queued.remove(req)
+        self._finalize(req, state, reason)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live request: its slot/pages (or spill pins) are
+        released and it terminates CANCELLED.  Returns False for unknown
+        or already-terminal rids."""
+        req = self.by_rid.get(rid)
+        if req is None or req.state in TERMINAL_STATES:
+            return False
+        self._terminate(req, CANCELLED, "cancelled by client")
+        return True
+
+    # ------------------------------------------------------------------ #
+    def _expire(self) -> None:
+        """Per-request deadline/cancellation sweep (start of every step)."""
+        now = self.clock()
+        for req in [*self.active.values(), *self.preempted, *self.queued]:
+            if self.control is not None and self.control.cancelled(req.rid):
+                self._terminate(req, CANCELLED, "cancelled by client")
+                continue
+            if (req.deadline_steps is not None
+                    and self.steps - req.arrival >= req.deadline_steps):
+                self._terminate(
+                    req, TIMED_OUT,
+                    f"step budget {req.deadline_steps} exhausted "
+                    f"(arrived step {req.arrival})",
+                )
+                continue
+            if (req.deadline_s is not None and req.t_added >= 0
+                    and now - req.t_added > req.deadline_s):
+                self._terminate(
+                    req, TIMED_OUT,
+                    f"wall-clock budget {req.deadline_s}s exhausted",
+                )
+        if self.max_queue is not None:
+            arrived = [r for r in self.queued if r.arrival <= self.steps]
+            for req in arrived[self.max_queue:]:  # shed newest arrivals
+                self.shed += 1
+                self._terminate(req, REJECTED,
+                                f"queue full (load shed at {self.max_queue})")
 
     # ------------------------------------------------------------------ #
     def _admit(self) -> None:
@@ -151,14 +322,20 @@ class ContinuousScheduler:
         # ones slipping past it.
         while free and self.preempted:
             req = min(self.preempted, key=lambda r: (r.arrival, r.rid))
-            if not self.pool.can_alloc(req.spill["n_pages"]):
-                if not self.active and self.pool.used_pages == 0:
-                    raise RuntimeError(
-                        f"request {req.rid} needs {req.spill['n_pages']} "
-                        f"pages to resume but the whole pool has only "
-                        f"{self.pool.num_pages - 1}; raise --pages"
-                    )
-                break  # wait for in-flight work to free pages
+            n = req.spill["n_pages"]
+            if (n > self.pool.num_pages - 1
+                    or n + len(req.spill.get("pinned", ()))
+                    > self.pool.max_pages_per_slot):
+                # resume is impossible in ANY pool state: isolate the
+                # failure to this request instead of wedging the engine
+                self._terminate(
+                    req, FAILED,
+                    f"needs {n} pages to resume but the pool has only "
+                    f"{self.pool.num_pages - 1}",
+                )
+                continue
+            if not self.pool.can_alloc(n):
+                break  # transient: wait for in-flight work to free pages
             slot = free.pop(0)
             self.eng.restore_slot(slot, req.spill)
             req.spill = None
@@ -166,6 +343,22 @@ class ContinuousScheduler:
             req.state = DECODE if req.n_prefilled >= req.plen else PREFILL
             self.preempted.remove(req)
             self.active[slot] = req
+
+        # Watermark backpressure with hysteresis: pause NEW admissions when
+        # pool occupancy crosses the high mark, resume below the low mark.
+        # Resumes above are exempt (spilled work must drain), and the pause
+        # auto-lifts when nothing in flight could ever lower occupancy.
+        usable = max(self.pool.num_pages - 1, 1)
+        frac = self.pool.used_pages / usable
+        if self._paused:
+            if frac <= self.watermark_low or not (self.active
+                                                  or self.preempted):
+                self._paused = False
+        elif frac >= self.watermark_high:
+            self._paused = True
+            self.admission_pauses += 1
+        if self._paused:
+            return
 
         # New admissions: FIFO over arrived requests.  Held back while
         # anything is preempted (spilled work resumes first — admitting
@@ -179,6 +372,21 @@ class ContinuousScheduler:
             req = self.queued[0]
             if req.arrival > self.steps:
                 break
+            # Admission control: a request whose worst case cannot fit an
+            # EMPTY pool (or one slot's block table) can never complete —
+            # reject it individually instead of crashing the run later.
+            worst = self.pool.pages_needed(req.plen + max(req.gen, 1) - 1)
+            if worst > min(self.pool.num_pages - 1,
+                           self.pool.max_pages_per_slot):
+                self.queued.pop(0)
+                self._finalize(
+                    req, REJECTED,
+                    f"needs {worst} pages (prompt {req.plen} + gen "
+                    f"{req.gen}) but the pool serves at most "
+                    f"{min(self.pool.num_pages - 1, self.pool.max_pages_per_slot)} "
+                    f"per request; raise --pages or lower --gen",
+                )
+                continue
             if req.prefix_hashes is None:
                 req.prefix_hashes = self.eng.prompt_hashes(req.prompt)
             n_cached, n_mapped, extra, revived = self.eng.prefix_plan(
@@ -198,13 +406,7 @@ class ContinuousScheduler:
             # free_pages is read live: mapping a cached prefix revives LRU
             # pages and draws the COW clone, both visible immediately
             if charged + first > self.pool.free_pages:
-                if not self.active and self.pool.used_pages == 0:
-                    raise RuntimeError(
-                        f"request {req.rid} needs {first} pages for its "
-                        f"first prefill chunk but the pool has only "
-                        f"{self.pool.num_pages - 1}; raise --pages"
-                    )
-                break
+                break  # transient: wait for in-flight work to free pages
             slot = free.pop(0)
             req.slot = slot
             got = self.eng.admit_prefix(slot, req.prompt,
@@ -217,6 +419,7 @@ class ContinuousScheduler:
             req.state = PREFILL
             self.active[slot] = req
             self.queued.pop(0)
+            self._last_progress = self.steps
 
     # ------------------------------------------------------------------ #
     def _plan(self) -> Dict[int, tuple]:
@@ -248,7 +451,14 @@ class ContinuousScheduler:
 
     def _fit(self, plan: Dict[int, tuple]) -> None:
         """Make the step's page demand fit the pool, preempting youngest
-        slots when it runs dry, then allocate."""
+        slots when it runs dry, then allocate.
+
+        Exhaustion with a single active slot no longer crashes the run:
+        if that request structurally cannot take another step (it grew
+        past the whole pool) it is FAILED individually; otherwise it is
+        parked (spilled) and resumed once pages return — the pool may be
+        transiently short because of external seizures (chaos) or spill
+        pins."""
         while True:
             need = 0
             for slot, (_, n) in plan.items():
@@ -260,13 +470,23 @@ class ContinuousScheduler:
                 )
             if need <= self.pool.free_pages:
                 break
-            if len(self.active) <= 1:
-                req = next(iter(self.active.values()))
-                raise RuntimeError(
-                    f"request {req.rid} needs more pages than the pool "
-                    f"holds ({self.pool.num_pages - 1}); raise --pages or "
-                    "lower --gen/--prompt-len"
-                )
+            if not self.active:
+                return
+            if len(self.active) == 1:
+                slot, req = next(iter(self.active.items()))
+                n = plan[slot][1]
+                if (self.pool.pages_needed(req.length + n)
+                        > self.pool.num_pages - 1):
+                    plan.pop(slot, None)
+                    self._terminate(
+                        req, FAILED,
+                        f"grew past the page pool "
+                        f"({self.pool.pages_needed(req.length + n)} pages "
+                        f"needed, {self.pool.num_pages - 1} total)",
+                    )
+                else:
+                    plan.pop(self._preempt_victim(), None)
+                return
             plan.pop(self._preempt_victim(), None)
         for slot, (_, n) in plan.items():
             req = self.active[slot]
@@ -293,18 +513,38 @@ class ContinuousScheduler:
                 self.on_token(req.rid, tok, self.steps)
             if req.finished():
                 finished.append(slot)
+        self._last_progress = self.steps
         for slot in finished:
             req = self.active.pop(slot)
-            req.state = DONE
-            req.finished_step = self.steps
-            self.finished.append(req)
-            self.outputs[req.rid] = req.out
+            req.slot = -1
+            self._finalize(req, FINISHED, "")
             self.eng.release(slot)
 
     # ------------------------------------------------------------------ #
+    def _break_stall(self) -> None:
+        """Livelock breaker: nothing active, something waiting, and no
+        forward progress for ``stall_limit`` steps — FAIL the blocking
+        request so the run terminates instead of spinning forever."""
+        head_arrived = bool(self.queued
+                            and self.queued[0].arrival <= self.steps)
+        if (self.active or not (self.preempted or head_arrived)
+                or self.steps - self._last_progress <= self.stall_limit):
+            return
+        if self.preempted:
+            victim = min(self.preempted, key=lambda r: (r.arrival, r.rid))
+        else:
+            victim = self.queued[0]
+        self._terminate(
+            victim, FAILED,
+            f"no scheduler progress for {self.stall_limit} steps "
+            f"(pool free={self.pool.free_pages})",
+        )
+        self._last_progress = self.steps
+
     def step(self) -> None:
-        """One scheduler step: admit, fit (maybe preempt), run the mixed
-        model step, sample/stream, evict finished slots."""
+        """One scheduler step: expire/cancel, admit, fit (maybe preempt),
+        run the mixed model step, sample/stream, evict finished slots."""
+        self._expire()
         self._admit()
         plan = self._plan()
         self._fit(plan)
@@ -325,14 +565,18 @@ class ContinuousScheduler:
             self.occupied_slot_steps += len(plan)
         self.pool.observe_step()
         self.steps += 1
+        self._break_stall()
+        if invariant_checks_enabled():
+            self.pool.assert_invariants()
 
     def mean_latency_steps(self) -> float:
-        """Mean arrival-to-completion latency of finished requests, in
+        """Mean arrival-to-completion latency of FINISHED requests, in
         scheduler steps (queueing + prefill + decode + preemption time)."""
-        if not self.finished:
+        done = [r for r in self.finished if r.state == FINISHED]
+        if not done:
             return 0.0
         return float(np.mean([r.finished_step - r.arrival + 1
-                              for r in self.finished]))
+                              for r in done]))
 
     def run(self) -> Dict[int, List[int]]:
         while self.pending():

@@ -1,0 +1,266 @@
+"""Crash-recoverable serving state: snapshot/restore of the full engine.
+
+A serving snapshot captures everything the continuous-batching engine needs
+to resume mid-stream after a hard kill:
+
+  * the device cache (every paged entry's codes + scales, every dense
+    per-slot entry) and each PREEMPTED request's spilled page codes —
+    saved through :mod:`repro.checkpoint.store` as npy leaf files with the
+    same atomic tmp -> ``step-N`` rename discipline as training
+    checkpoints;
+  * the host allocator (:meth:`PagePool.state_dict`: free list, refcounts,
+    block tables, prefix index + LRU order, spill pins);
+  * the scheduler's request sets (active, preempted, queued, terminal) with
+    every request's prompt, emitted tokens, prefill progress, and
+    deadline bookkeeping (wall-clock deadlines are re-anchored: elapsed
+    time is saved, so a restart does not reset the budget);
+  * engine host state: the step counter (the PRNG-stream fold positions
+    for the bucketed splice path) and the prefix-registration cursors;
+  * the sampler's numpy Generator state (temperature > 0 runs).
+
+Because KV page codes are a *pure function of page content* — the
+position-addressed stochastic-rounding streams fold each write's position,
+never the wall-clock step of the batch shape — restoring codes byte-for-
+byte puts the engine in a state where every subsequent write draws exactly
+the rounding bits an uninterrupted run would have drawn.  That is what
+makes the recovery contract testable: survivors' remaining tokens are
+bit-identical, stochastic rounding ON (``tests/test_fault_tolerance.py``).
+
+The array tree is addressed by the checkpoint store's "/"-joined tree-path
+keys; the *structure* (which rids are preempted, how many spill leaves)
+differs snapshot to snapshot, so restore goes through
+:func:`store.restore_raw` and reassembles against the manifest's
+``data_state`` rather than a static ``like`` tree.
+"""
+from __future__ import annotations
+
+import pathlib
+from collections import Counter
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import store
+from .scheduler import FINISHED, TERMINAL_STATES, ContinuousScheduler, Request
+
+__all__ = ["save_snapshot", "load_snapshot"]
+
+
+def _req_record(req: Request, now: float) -> dict:
+    rec = {
+        "rid": req.rid,
+        "prompt": np.asarray(req.prompt).tolist(),
+        "gen": req.gen,
+        "arrival": req.arrival,
+        "state": req.state,
+        "n_prefilled": req.n_prefilled,
+        "out": list(req.out),
+        "slot": req.slot,
+        "prefix_hashes": req.prefix_hashes,
+        "preemptions": req.preemptions,
+        "finished_step": req.finished_step,
+        "deadline_steps": req.deadline_steps,
+        "deadline_s": req.deadline_s,
+        "finish_reason": req.finish_reason,
+        # wall-clock deadlines survive the restart: save elapsed, restore
+        # re-anchors t_added so the budget keeps draining
+        "elapsed_s": (now - req.t_added) if req.t_added >= 0 else 0.0,
+    }
+    if req.spill is not None:
+        rec["spill_meta"] = {
+            "n_pages": req.spill["n_pages"],
+            "pinned": [list(p) for p in req.spill.get("pinned", ())],
+            "hashes": req.spill.get("hashes"),
+            "registered": req.spill.get("registered", 0),
+        }
+    return rec
+
+
+def _rebuild_request(rec: dict, now: float) -> Request:
+    req = Request(
+        rid=rec["rid"],
+        prompt=np.asarray(rec["prompt"], np.int64),
+        gen=rec["gen"],
+        arrival=rec["arrival"],
+        state=rec["state"],
+        n_prefilled=rec["n_prefilled"],
+        out=list(rec["out"]),
+        slot=rec["slot"],
+        prefix_hashes=rec["prefix_hashes"],
+        preemptions=rec["preemptions"],
+        finished_step=rec["finished_step"],
+        deadline_steps=rec["deadline_steps"],
+        deadline_s=rec["deadline_s"],
+        finish_reason=rec["finish_reason"],
+    )
+    req.t_added = now - rec.get("elapsed_s", 0.0)
+    return req
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> dict:
+    """Reassemble "/"-keyed leaves into nested containers; dicts whose keys
+    are all digits (tuple positions in the original tree) become lists."""
+    root: dict = {}
+    for key, arr in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = arr
+
+    def listify(d):
+        if not isinstance(d, dict):
+            return d
+        out = {k: listify(v) for k, v in d.items()}
+        # tuple positions are contiguous 0..n-1; rid keys ("7") are digits
+        # too but not contiguous, so require the full range before listifying
+        if out and set(out) == {str(i) for i in range(len(out))}:
+            return [out[str(i)] for i in range(len(out))]
+        return out
+
+    return listify(root)
+
+
+def save_snapshot(ckpt_dir, eng, sched: ContinuousScheduler,
+                  sampler_rng: Optional[np.random.Generator] = None,
+                  keep_last: int = 3) -> None:
+    """Write one atomic serving snapshot at ``sched.steps``.
+
+    Synchronous (unlike training's async path): a serving snapshot is a
+    few pages of codes, and the recovery tests kill the engine right after
+    — a half-written async snapshot would fall back to an older step,
+    which is correct but noisier to reason about."""
+    now = sched.clock()
+    arrays = {"cache": eng.cache}
+    spills = {}
+    for req in sched.preempted:
+        spills[str(req.rid)] = req.spill["state"]
+    if spills:
+        arrays["spills"] = spills
+    data_state = {
+        "kind": "serving",
+        "engine": {
+            "step": eng._step,
+            "slot_hash": {str(s): h for s, h in eng._slot_hash.items()},
+            "slot_registered": {str(s): n
+                                for s, n in eng._slot_registered.items()},
+        },
+        "pool": eng.pool.state_dict(),
+        "scheduler": {
+            "steps": sched.steps,
+            "decoded_tokens": sched.decoded_tokens,
+            "prefill_tokens": sched.prefill_tokens,
+            "prefix_hit_tokens": sched.prefix_hit_tokens,
+            "occupied_slot_steps": sched.occupied_slot_steps,
+            "preemptions": sched.preemptions,
+            "shed": sched.shed,
+            "admission_pauses": sched.admission_pauses,
+            "terminal_counts": dict(sched.terminal_counts),
+            "paused": sched._paused,
+            "last_progress": sched._last_progress,
+            # order matters only within each set; rebuild preserves it
+            "finished": [_req_record(r, now) for r in sched.finished],
+            "active": [_req_record(r, now)
+                       for r in sched.active.values()],
+            "preempted": [_req_record(r, now) for r in sched.preempted],
+            "queued": [_req_record(r, now) for r in sched.queued],
+        },
+        "sampler_rng": (None if sampler_rng is None
+                        else sampler_rng.bit_generator.state),
+    }
+    store.save(ckpt_dir, arrays, step=sched.steps, data_state=data_state,
+               keep_last=keep_last, async_=False)
+
+
+def load_snapshot(ckpt_dir, eng, sched: ContinuousScheduler,
+                  sampler_rng: Optional[np.random.Generator] = None,
+                  step: Optional[int] = None) -> int:
+    """Restore a snapshot into a FRESH engine + scheduler pair (same ctor
+    arguments as the killed ones).  Returns the restored step.
+
+    The engine must be newly constructed: its cache tree supplies the
+    treedef the flat leaves are unflattened against, and its jitted step
+    functions retrace lazily."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    flat, manifest = store.restore_raw(ckpt_dir, step=step)
+    data = manifest["data_state"]
+    if data.get("kind") != "serving":
+        raise ValueError(f"{ckpt_dir} holds a non-serving checkpoint")
+    now = sched.clock()
+
+    # --- device cache: unflatten against the fresh engine's treedef ---- #
+    paths, treedef = jax.tree_util.tree_flatten_with_path(eng.cache)
+    leaves = []
+    for path, like in paths:
+        key = "cache/" + store.path_key(path)
+        arr = flat.pop(key)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"{key}: snapshot shape {arr.shape} != engine {like.shape} "
+                "(engine must be constructed with the same geometry)"
+            )
+        leaves.append(jax.numpy.asarray(arr, like.dtype))
+    eng.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # --- host allocator + engine host state ---------------------------- #
+    eng.pool.load_state_dict(data["pool"])
+    eng._step = data["engine"]["step"]
+    eng._slot_hash = {int(s): h
+                      for s, h in data["engine"]["slot_hash"].items()}
+    eng._slot_registered = {
+        int(s): n for s, n in data["engine"]["slot_registered"].items()
+    }
+
+    # --- scheduler request sets ---------------------------------------- #
+    st = data["scheduler"]
+    sched.steps = st["steps"]
+    sched.decoded_tokens = st["decoded_tokens"]
+    sched.prefill_tokens = st["prefill_tokens"]
+    sched.prefix_hit_tokens = st["prefix_hit_tokens"]
+    sched.occupied_slot_steps = st["occupied_slot_steps"]
+    sched.preemptions = st["preemptions"]
+    sched.shed = st["shed"]
+    sched.admission_pauses = st.get("admission_pauses", 0)
+    sched.terminal_counts = Counter(st["terminal_counts"])
+    sched._paused = st["paused"]
+    sched._last_progress = st["last_progress"]
+    sched.finished, sched.queued, sched.preempted = [], [], []
+    sched.active, sched.outputs, sched.by_rid = {}, {}, {}
+    for rec in st["finished"]:
+        req = _rebuild_request(rec, now)
+        sched.finished.append(req)
+        sched.by_rid[req.rid] = req
+        if req.state == FINISHED:
+            sched.outputs[req.rid] = req.out
+        assert req.state in TERMINAL_STATES
+    for rec in st["active"]:
+        req = _rebuild_request(rec, now)
+        sched.active[req.slot] = req
+        sched.by_rid[req.rid] = req
+    spill_arrays = _nest({k[len("spills/"):]: v for k, v in flat.items()
+                          if k.startswith("spills/")})
+    for rec in st["preempted"]:
+        req = _rebuild_request(rec, now)
+        meta = rec["spill_meta"]
+        state = spill_arrays[str(req.rid)]
+        req.spill = {
+            "n_pages": meta["n_pages"],
+            "pinned": [tuple(p) for p in meta["pinned"]],
+            "state": {
+                "prefix": tuple(state.get("prefix", [])),
+                "blocks": tuple(state.get("blocks", [])),
+            },
+            "hashes": meta["hashes"],
+            "registered": meta["registered"],
+        }
+        sched.preempted.append(req)
+        sched.by_rid[req.rid] = req
+    for rec in st["queued"]:
+        req = _rebuild_request(rec, now)
+        sched.queued.append(req)
+        sched.by_rid[req.rid] = req
+
+    if sampler_rng is not None and data.get("sampler_rng") is not None:
+        sampler_rng.bit_generator.state = data["sampler_rng"]
+    return manifest["step"]

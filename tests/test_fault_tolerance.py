@@ -1,0 +1,391 @@
+"""Serving fault tolerance: per-request failure isolation, chaos
+injection, and crash recovery.
+
+The acceptance contract (ISSUE 6): under injected pool exhaustion,
+preemption storms, deadline overruns, and an engine kill/restore at step
+N, no unhandled exception escapes the serving loop; rejected/expired/
+cancelled requests release every page they held (pool invariants clean
+every step); and *surviving* requests' outputs are bit-identical to a
+fault-free run with stochastic KV rounding ON — the position-addressed
+PRNG streams make per-slot numerics independent of batch composition, so
+other requests being shed, preempted or killed cannot perturb a
+survivor's tokens.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import serve
+from repro.runtime import fault
+from repro.serving import (
+    ChaosHarness,
+    ContinuousScheduler,
+    FaultPlan,
+    PagePool,
+    Request,
+    ServeControl,
+    load_snapshot,
+    save_snapshot,
+)
+
+
+def _engine(cfg, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_seq", 16)
+    kw.setdefault("cache_impl", "paged")
+    kw.setdefault("page_size", 4)
+    # stochastic KV rounding ON: the acceptance gate is bit-identity of
+    # survivors under faults *with* the stochastic serving numerics
+    kw.setdefault("stochastic_kv", True)
+    return serve.Engine(cfg, **kw)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen2-0.5b", smoke=True, quant="fp8_w8kv8")
+
+
+def _pool_clean(eng):
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+    eng.pool.assert_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# Per-request failure isolation: deadlines, cancellation
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("sched,deadline", [("continuous", 7),
+                                            ("bucketed", 5)])
+def test_deadline_expiry_isolates_survivors(cfg, sched, deadline):
+    """Requests that blow their step budget time out individually; the
+    ones that finish emit exactly the fault-free run's tokens."""
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, cfg.vocab, size=6) for _ in range(3)]
+    eng = _engine(cfg, slots=1)
+    want, _ = serve.run(eng, [q.copy() for q in queue], gen=4, quiet=True,
+                        scheduler=sched)
+    eng = _engine(cfg, slots=1)
+    got, stats = serve.run(eng, [q.copy() for q in queue], gen=4,
+                           quiet=True, scheduler=sched,
+                           deadline_steps=deadline)
+    assert stats["terminal"].get("timed_out", 0) >= 1
+    assert got, "at least the first request must beat the deadline"
+    for rid, toks in got.items():
+        assert toks == want[rid], rid
+    for rid, (state, reason) in stats["statuses"].items():
+        assert state == ("finished" if rid in got else "timed_out")
+        if rid not in got:
+            assert "budget" in reason or "deadline" in reason
+    _pool_clean(eng)
+
+
+def test_cancellation_mid_prefill_releases_pages(cfg):
+    """Cancelling a request halfway through its chunked prefill frees its
+    pages and leaves the other request's tokens untouched."""
+    rng = np.random.default_rng(1)
+    q0 = rng.integers(0, cfg.vocab, size=4)
+    q1 = rng.integers(0, cfg.vocab, size=12)  # 3 chunks of prefill
+    eng = _engine(cfg, slots=2)
+    solo, _ = serve.run(eng, [q0.copy()], gen=5, quiet=True,
+                        scheduler="continuous")
+    eng = _engine(cfg, slots=2)
+    sched = ContinuousScheduler(eng, chunk=4)
+    sched.add(Request(rid=0, prompt=q0, gen=5))
+    sched.add(Request(rid=1, prompt=q1, gen=5))
+    sched.step()  # both admitted; q1 has prefilled 4 of 12 tokens
+    req1 = sched.by_rid[1]
+    assert req1.state == "prefill" and 0 < req1.n_prefilled < req1.plen
+    assert sched.cancel(1)
+    assert not sched.cancel(1)  # already terminal: no-op
+    eng.pool.assert_invariants()
+    outs = sched.run()
+    assert outs == {0: solo[0]}
+    assert sched.statuses()[1] == ("cancelled", "cancelled by client")
+    _pool_clean(eng)
+
+
+def test_cancellation_via_control_bucketed(cfg):
+    """A ServeControl cancellation lands mid-decode in the bucketed loop:
+    the slot is released and survivors are unaffected."""
+    rng = np.random.default_rng(2)
+    queue = [rng.integers(0, cfg.vocab, size=4) for _ in range(3)]
+    eng = _engine(cfg, slots=2)
+    want, _ = serve.run(eng, [q.copy() for q in queue], gen=6, quiet=True,
+                        scheduler="bucketed")
+    control = ServeControl()
+
+    def on_token(rid, tok, step):
+        if rid == 1:  # cancel as soon as request 1 produces a token
+            control.cancel(1)
+
+    eng = _engine(cfg, slots=2)
+    got, stats = serve.run(eng, [q.copy() for q in queue], gen=6,
+                           quiet=True, scheduler="bucketed",
+                           control=control, on_token=on_token)
+    assert stats["statuses"][1][0] == "cancelled"
+    assert sorted(got) == [0, 2]
+    for rid in got:
+        assert got[rid] == want[rid], rid
+    _pool_clean(eng)
+
+
+def test_max_tokens_caps_generation(cfg):
+    rng = np.random.default_rng(3)
+    queue = [rng.integers(0, cfg.vocab, size=4) for _ in range(2)]
+    eng = _engine(cfg, slots=2)
+    outs, stats = serve.run(eng, queue, gen=10, quiet=True,
+                            scheduler="continuous", max_tokens=4)
+    assert all(len(v) == 4 for v in outs.values())
+    assert stats["terminal"] == {"finished": 2}
+    _pool_clean(eng)
+
+
+# --------------------------------------------------------------------------- #
+# Backpressure: bounded queue + watermarks
+# --------------------------------------------------------------------------- #
+def test_bounded_queue_load_shedding(cfg):
+    """Arrived requests beyond max_queue are shed newest-first; the ones
+    that stay match the uncontended run bit for bit."""
+    rng = np.random.default_rng(4)
+    queue = [rng.integers(0, cfg.vocab, size=4) for _ in range(5)]
+    eng = _engine(cfg, slots=2)
+    want, _ = serve.run(eng, [q.copy() for q in queue], gen=5, quiet=True,
+                        scheduler="continuous")
+    eng = _engine(cfg, slots=2)
+    got, stats = serve.run(eng, [q.copy() for q in queue], gen=5,
+                           quiet=True, scheduler="continuous", max_queue=2)
+    assert stats["shed"] == 3 and stats["terminal"]["rejected"] == 3
+    assert sorted(got) == [0, 1]  # oldest arrivals survive
+    for rid in got:
+        assert got[rid] == want[rid], rid
+    _pool_clean(eng)
+
+
+def test_watermark_pauses_admission_under_pressure(cfg):
+    """A high watermark below the pool's natural occupancy pauses new
+    admissions (hysteresis) without changing any request's tokens."""
+    rng = np.random.default_rng(5)
+    queue = [rng.integers(0, cfg.vocab, size=6) for _ in range(4)]
+    eng = _engine(cfg, slots=3, num_pages=9)
+    want, _ = serve.run(eng, [q.copy() for q in queue], gen=6, quiet=True,
+                        scheduler="continuous")
+    eng = _engine(cfg, slots=3, num_pages=9)
+    got, stats = serve.run(eng, [q.copy() for q in queue], gen=6,
+                           quiet=True, scheduler="continuous",
+                           watermark_high=0.5, watermark_low=0.25)
+    assert stats["admission_pauses"] > 0
+    assert got == want
+    _pool_clean(eng)
+
+
+# --------------------------------------------------------------------------- #
+# Chaos suite: exhaustion + storms + corruption drills + overruns
+# --------------------------------------------------------------------------- #
+def test_chaos_suite_survivors_bit_identical(cfg, monkeypatch, tmp_path):
+    """Injected exhaustion/storm/corruption/overrun faults: the run
+    completes with invariants checked every step, heartbeats on disk, and
+    every request's tokens bit-identical to the fault-free run."""
+    monkeypatch.setenv("REPRO_CHECK_INVARIANTS", "1")
+    rng = np.random.default_rng(6)
+    queue = [rng.integers(0, cfg.vocab, size=6) for _ in range(5)]
+
+    def make_engine():
+        return _engine(cfg, slots=3, num_pages=9)
+
+    base, _ = fault.run_serving(make_engine, queue, gen=5,
+                                log=lambda *a: None)
+    plan = FaultPlan(seed=1, pool_exhaustion=0.4, exhaustion_pages=2,
+                     exhaustion_hold=2, preemption_storm=0.3,
+                     corruption=0.3, overrun=0.3)
+    hb = tmp_path / "hb.json"
+    out, stats = fault.run_serving(
+        make_engine, queue, gen=5, log=lambda *a: None, chaos=plan,
+        step_deadline_s=3600.0, heartbeat_path=hb,
+    )
+    counts = stats["chaos"]
+    assert counts["exhaustion"] > 0 and counts["storm"] > 0
+    assert counts["corruption"] > 0 and counts["overrun"] > 0
+    assert stats["watchdog_overruns"] == counts["overrun"]
+    assert out == base
+    beat = json.loads(hb.read_text())
+    assert beat["step"] == stats["steps"] and beat["finished"] == 5
+
+
+def test_chaos_corruption_drill_detects():
+    """The refcount-corruption drill must be *caught* by
+    assert_invariants — and the pool must be clean after repair."""
+
+    class _Sched:
+        def __init__(self, pool):
+            self.pool, self.steps, self.active = pool, 0, {}
+
+    pool = PagePool(num_pages=6, page_size=4, slots=2, max_pages_per_slot=4)
+    pool.alloc(0, 2)
+    h = ChaosHarness(_Sched(pool), FaultPlan(corruption=1.0))
+    h._inject_corruption()
+    assert h.counts["corruption"] == 1
+    pool.assert_invariants()
+
+
+def test_chaos_plan_is_deterministic(cfg):
+    """Same FaultPlan seed + same request stream => same fault schedule
+    and the same outputs."""
+    rng = np.random.default_rng(7)
+    queue = [rng.integers(0, cfg.vocab, size=5) for _ in range(4)]
+    plan = FaultPlan(seed=3, pool_exhaustion=0.5, exhaustion_pages=2,
+                     exhaustion_hold=2, preemption_storm=0.3)
+
+    def once():
+        eng = _engine(cfg, slots=3, num_pages=9)
+        sched = ContinuousScheduler(eng, chunk=4)
+        for i, p in enumerate(queue):
+            sched.add(Request(rid=i, prompt=p.copy(), gen=5))
+        h = ChaosHarness(sched, plan)
+        while sched.pending():
+            h.step()
+        h.release_all_seizures()
+        eng.pool.assert_invariants()
+        return sched.outputs, dict(h.counts)
+
+    out1, c1 = once()
+    out2, c2 = once()
+    assert out1 == out2 and c1 == c2
+    assert c1["exhaustion"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# Crash recovery: snapshot/restore and kill-at-step-N
+# --------------------------------------------------------------------------- #
+def test_snapshot_roundtrip_mid_preemption(cfg, tmp_path):
+    """Snapshot taken while a request sits PREEMPTED (spilled codes in
+    the record) restores into a fresh engine that finishes identically."""
+    rng = np.random.default_rng(8)
+    queue = [rng.integers(0, cfg.vocab, size=6) for _ in range(4)]
+
+    def build():
+        eng = _engine(cfg, slots=3, num_pages=7)  # tight: forces spills
+        return eng, ContinuousScheduler(eng, chunk=4)
+
+    eng, sched = build()
+    for i, p in enumerate(queue):
+        sched.add(Request(rid=i, prompt=p.copy(), gen=6))
+    for _ in range(200):
+        sched.step()
+        if sched.preempted:
+            break
+    else:
+        pytest.fail("pool never forced a preemption")
+    save_snapshot(tmp_path / "snap", eng, sched)
+    eng2, sched2 = build()
+    step = load_snapshot(tmp_path / "snap", eng2, sched2)
+    assert step == sched.steps
+    assert len(sched2.preempted) == len(sched.preempted)
+    out1 = sched.run()
+    out2 = sched2.run()
+    assert out2 == out1
+    _pool_clean(eng2)
+
+
+@pytest.mark.parametrize("prefix", [False, True])
+def test_kill_at_step_n_recovery_bit_identical(cfg, prefix, tmp_path):
+    """Engine killed at step N, rebuilt, restored from the latest
+    snapshot: every request's final output — including tokens generated
+    *after* the restore — is bit-identical to the uninterrupted run,
+    stochastic KV rounding ON, prefix cache on and off."""
+    rng = np.random.default_rng(9)
+    shared = rng.integers(0, cfg.vocab, size=4)
+    queue = [np.concatenate([shared, rng.integers(0, cfg.vocab, size=4)])
+             for _ in range(4)]
+
+    def make_engine():
+        return _engine(cfg, slots=2, prefix_cache=prefix)
+
+    base, base_stats = fault.run_serving(make_engine, queue, gen=6,
+                                         log=lambda *a: None)
+    assert base_stats["restarts"] == 0
+    out, stats = fault.run_serving(
+        make_engine, queue, gen=6, log=lambda *a: None,
+        chaos=FaultPlan(kill_at_step=7),
+        ckpt_dir=tmp_path / "ck", snapshot_every=3,
+    )
+    assert stats["restarts"] == 1 and stats["chaos"]["killed"] == 1
+    assert stats["snapshots"] >= 2  # steps 3 and 6 at least
+    assert out == base
+    assert stats["terminal"]["finished"] == 4
+
+
+def test_kill_without_snapshot_cold_replays(cfg, tmp_path):
+    """No snapshot on disk at kill time: the stream is re-seeded cold and
+    still completes with the fault-free outputs."""
+    rng = np.random.default_rng(10)
+    queue = [rng.integers(0, cfg.vocab, size=5) for _ in range(3)]
+
+    def make_engine():
+        return _engine(cfg, slots=2)
+
+    base, _ = fault.run_serving(make_engine, queue, gen=5,
+                                log=lambda *a: None)
+    out, stats = fault.run_serving(
+        make_engine, queue, gen=5, log=lambda *a: None,
+        chaos=FaultPlan(kill_at_step=4),  # no ckpt_dir configured
+    )
+    assert stats["restarts"] == 1
+    assert out == base
+
+
+# --------------------------------------------------------------------------- #
+# Pool chaos/recovery primitives + heartbeat/watchdog units
+# --------------------------------------------------------------------------- #
+def test_page_pool_seize_release_and_state_dict_roundtrip():
+    pool = PagePool(num_pages=8, page_size=4, slots=2, max_pages_per_slot=4)
+    pool.alloc(0, 2)
+    ids = pool.seize(3)
+    assert len(ids) == 3 and pool.free_pages == 2
+    pool.assert_invariants()
+    sd = pool.state_dict()  # seizures are transient: recorded as free
+    assert sorted(sd["free"])[-3:] == sorted(ids)
+    pool2 = PagePool(num_pages=8, page_size=4, slots=2, max_pages_per_slot=4)
+    pool2.load_state_dict(sd)  # asserts invariants itself
+    assert pool2.free_pages == 5  # seizure released in the restored pool
+    assert pool2.pages_of == pool.pages_of
+    assert pool2.block_tables.tolist() == pool.block_tables.tolist()
+    pool.release_seized(ids)
+    pool.assert_invariants()
+    assert pool.free_pages == 5
+    bad = pool.state_dict()
+    bad["geometry"] = [9, 4, 2, 4]
+    with pytest.raises(ValueError, match="geometry"):
+        pool2.load_state_dict(bad)
+
+
+def test_page_pool_unpin_parks_registered_pages():
+    pool = PagePool(num_pages=6, page_size=4, slots=2, max_pages_per_slot=4)
+    ids = pool.alloc(0, 2)
+    pool.register_prefix("h0", ids[0])
+    spilled, pinned = pool.spill_slot(0)
+    assert pinned == [(0, ids[0])] and spilled == [ids[1]]
+    pool.assert_invariants()
+    pool.unpin(pinned)  # the spill record's owner died: drop the pin
+    pool.assert_invariants()
+    assert pool.free_pages == 5  # parked page is evictable again
+    assert pool.match_prefix(["h0"]) == [ids[0]]  # ... and still a hit
+
+
+def test_write_heartbeat_atomic_replace(tmp_path):
+    p = tmp_path / "hb" / "heartbeat.json"
+    fault.write_heartbeat(p, 3, extra={"active": 1})
+    fault.write_heartbeat(p, 4)
+    d = json.loads(p.read_text())
+    assert d["step"] == 4 and "t" in d
+    assert not p.with_suffix(".tmp").exists()  # replaced, not left behind
+
+
+def test_watchdog_inject_overrun():
+    wd = fault.StepWatchdog(1000.0)
+    assert not wd.inject_overrun()  # no step in flight
+    wd.start()
+    assert wd.inject_overrun()
+    with pytest.raises(TimeoutError):
+        wd.check()
+    assert wd.tripped

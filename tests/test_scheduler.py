@@ -157,11 +157,20 @@ def test_preemption_under_page_exhaustion_preserves_outputs(cfg):
     assert eng.pool.free_pages == 6
 
 
-def test_single_oversized_request_raises(cfg):
+@pytest.mark.parametrize("sched", ["continuous", "bucketed"])
+def test_single_oversized_request_rejected(cfg, sched):
+    """A request whose worst case exceeds the whole pool is REJECTED
+    individually (pages untouched, invariants clean) instead of raising
+    out of the run."""
     eng = _engine(cfg, slots=2, max_seq=16, num_pages=3)  # 2 usable pages
     q = [np.arange(10) % cfg.vocab]
-    with pytest.raises(RuntimeError, match="pages"):
-        serve.run(eng, q, gen=8, quiet=True, scheduler="continuous")
+    outs, stats = serve.run(eng, q, gen=8, quiet=True, scheduler=sched)
+    assert outs == {}
+    state, reason = stats["statuses"][0]
+    assert state == "rejected" and "pages" in reason
+    assert stats["terminal"] == {"rejected": 1}
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+    eng.pool.assert_invariants()
 
 
 # --------------------------------------------------------------------------- #
