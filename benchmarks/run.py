@@ -39,6 +39,10 @@ Framework:
   serve_chaos             fault-tolerant serving under chaos injection
                           (shed/timeout counts, kill/restore recovery,
                           survivors bit-identical) -> BENCH_5.json.
+  serve_phases            telemetry-backed per-phase latency breakdown of
+                          the serving step (admit/prefill/decode/kv_write/
+                          host), paged vs dense and prefix on vs off
+                          -> BENCH_6.json.
   roofline_summary        key roofline numbers from the dry-run artifacts.
 """
 import json
@@ -523,6 +527,67 @@ def serve_chaos():
          "run, stochastic KV rounding ON (position-addressed write keys)")
 
 
+def serve_phases():
+    """Telemetry-backed per-phase latency breakdown of the serving step.
+
+    Every engine step decomposes into the five canonical telemetry spans
+    — admit (queue sweep + slot admission), prefill (chunked prompt
+    compute), decode (one-token step), kv_write (page splice + COW), host
+    (planning, capacity checks, commit bookkeeping) — and this bench
+    reports where the wall-clock actually goes, cell by cell: the paged
+    vs dense cache under the bucketed scheduler, and the prefix cache on
+    vs off under the continuous scheduler on a shared-system-prompt
+    stream.  Zeros are meaningful (dense has no kv_write span; the
+    bucketed path folds splice time into prefill), so every cell emits
+    all five phases.  The per-cell ``decode_tok_s`` vs end-to-end
+    ``tok_s`` split separates steady-state decode throughput from
+    prefill/admission overhead.  The acceptance run writes BENCH_6.json:
+    ``python benchmarks/run.py serve_phases --json=BENCH_6.json``.
+    """
+    from repro.configs import get_config
+    from repro.launch import serve
+    from repro.serving.telemetry import PHASES
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, size=16)  # common system prompt
+    suffixes = [4, 6, 5, 7, 4, 6]
+    gen = 8
+    queue = [np.concatenate([shared, rng.integers(0, 256, size=s)])
+             for s in suffixes]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(2.0, size=len(queue)))
+    ).astype(int)
+    cfg = get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
+    cells = [
+        ("paged_bucketed", dict(cache_impl="paged", page_size=8),
+         dict(scheduler="bucketed")),
+        ("dense_bucketed", dict(cache_impl="dense"),
+         dict(scheduler="bucketed")),
+        ("prefix_on_continuous",
+         dict(cache_impl="paged", page_size=8, prefix_cache=True),
+         dict(scheduler="continuous", chunk=8)),
+        ("prefix_off_continuous",
+         dict(cache_impl="paged", page_size=8, prefix_cache=False),
+         dict(scheduler="continuous", chunk=8)),
+    ]
+    for name, ekw, rkw in cells:
+        eng = serve.Engine(cfg, slots=3, max_seq=32, **ekw)
+        _, stats = serve.run(eng, [q.copy() for q in queue], gen=gen,
+                             quiet=True, arrivals=arrivals, **rkw)
+        phases = stats["phases"]
+        total_s = sum(p["sum_s"] for p in phases.values())
+        tag = f"serve_phases/qwen2-0.5b-smoke/{name}"
+        for ph in PHASES:
+            p = phases[ph]
+            share = p["sum_s"] / total_s if total_s > 0 else 0.0
+            emit(f"{tag}/{ph}_ms", f"{p['sum_s'] * 1e3:.2f}",
+                 f"count={p['count']} mean={p['mean_s'] * 1e6:.0f}us "
+                 f"share={share:.2f} of instrumented wall", "ms")
+        emit(f"{tag}/decode_tok_s", f"{stats['decode_tok_s']:.2f}",
+             f"e2e tok_s={stats['tok_s']:.2f} steps={stats['steps']} "
+             f"slots=3 gen={gen} cpu", "tok/s")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -549,6 +614,7 @@ BENCHES = {
     "serve_continuous": serve_continuous,
     "serve_prefix": serve_prefix,
     "serve_chaos": serve_chaos,
+    "serve_phases": serve_phases,
     "roofline_summary": roofline_summary,
 }
 

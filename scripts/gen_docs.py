@@ -1,4 +1,7 @@
-"""Regenerate docs/carry_in_tables.md from src/repro/core/carry_ins.py.
+"""Regenerate the generated doc sections from their in-code sources:
+docs/carry_in_tables.md from src/repro/core/carry_ins.py, the policy
+preset table in docs/numerics.md from repro.numerics, and the metric
+catalog in docs/observability.md from repro.serving.telemetry.
 
 The paper's Tables 2/3 give one boolean carry-in expression per
 (format x op x rounding-mode) cell; the repo implements them as callables in
@@ -33,8 +36,11 @@ from repro.core.carry_ins import CARRY_INS, FACTORED_MUL  # noqa: E402
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC = ROOT / "docs" / "carry_in_tables.md"
 NUMERICS_DOC = ROOT / "docs" / "numerics.md"
+OBSERVABILITY_DOC = ROOT / "docs" / "observability.md"
 PRESETS_BEGIN = "<!-- BEGIN GENERATED: policy-presets -->"
 PRESETS_END = "<!-- END GENERATED: policy-presets -->"
+METRICS_BEGIN = "<!-- BEGIN GENERATED: metric-catalog -->"
+METRICS_END = "<!-- END GENERATED: metric-catalog -->"
 
 MODES = ("rne", "rna", "rnz", "ru", "rd", "rz", "faithful")
 OPS = ("mul", "square", "div", "recip", "sqrt", "rsqrt")
@@ -298,30 +304,71 @@ def render_preset_table() -> str:
     return "\n".join(lines)
 
 
-def splice_presets(doc_text: str) -> str:
-    """Replace the generated section of docs/numerics.md in place.
+def render_metric_table() -> str:
+    """The serving telemetry METRIC_CATALOG as a markdown section."""
+    from repro.serving.telemetry import METRIC_CATALOG
+
+    lines = [
+        METRICS_BEGIN,
+        "",
+        "| metric | kind | labels | buckets | description |",
+        "| --- | --- | --- | --- | --- |",
+    ]
+    for s in METRIC_CATALOG:
+        labels = ", ".join(f"`{lb}`" for lb in s.labels) or "—"
+        buckets = (", ".join(f"{b:g}" for b in s.buckets)
+                   if s.buckets else "—")
+        lines.append(f"| `{s.name}` | {s.kind} | {labels} | {buckets} | "
+                     f"{s.help} |")
+    lines += [
+        "",
+        "Histogram buckets are upper edges in seconds (`serve_queue_wait_"
+        "steps` counts steps); every histogram also exports an implicit",
+        "`+Inf` bucket plus `_sum`/`_count` series.  Regenerated by",
+        "`python scripts/gen_docs.py` from",
+        "`src/repro/serving/telemetry.py` (`METRIC_CATALOG`).",
+        "",
+        METRICS_END,
+    ]
+    return "\n".join(lines)
+
+
+def _splice(doc_path: pathlib.Path, doc_text: str, begin: str, end: str,
+            body: str) -> str:
+    """Replace one marker-delimited generated section in place.
 
     Raises ValueError with an actionable message when the marker pair is
     missing or malformed (e.g. mangled by a merge) — the generator cannot
-    place the table without them.
+    place the section without them.
     """
-    begin = doc_text.find(PRESETS_BEGIN)
-    end = doc_text.find(PRESETS_END)
-    if begin < 0 or end < 0 or end < begin:
+    b = doc_text.find(begin)
+    e = doc_text.find(end)
+    if b < 0 or e < 0 or e < b:
         raise ValueError(
-            f"{NUMERICS_DOC} is missing the marker pair\n  {PRESETS_BEGIN}\n"
-            f"  {PRESETS_END}\nrestore both markers (in that order) in the "
-            "Presets section, then rerun scripts/gen_docs.py"
+            f"{doc_path} is missing the marker pair\n  {begin}\n  {end}\n"
+            "restore both markers (in that order), then rerun "
+            "scripts/gen_docs.py"
         )
-    end += len(PRESETS_END)
-    return doc_text[:begin] + render_preset_table() + doc_text[end:]
+    return doc_text[:b] + body + doc_text[e + len(end):]
+
+
+def splice_presets(doc_text: str) -> str:
+    return _splice(NUMERICS_DOC, doc_text, PRESETS_BEGIN, PRESETS_END,
+                   render_preset_table())
+
+
+def splice_metrics(doc_text: str) -> str:
+    return _splice(OBSERVABILITY_DOC, doc_text, METRICS_BEGIN, METRICS_END,
+                   render_metric_table())
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="(Re)generate docs/carry_in_tables.md from "
-                    "core/carry_ins.py and the preset table in "
-                    "docs/numerics.md from repro.numerics",
+                    "core/carry_ins.py, the preset table in "
+                    "docs/numerics.md from repro.numerics, and the metric "
+                    "catalog in docs/observability.md from "
+                    "repro.serving.telemetry",
     )
     ap.add_argument("--check", action="store_true",
                     help="exit 1 if the checked-in files are stale instead "
@@ -333,13 +380,18 @@ def main(argv=None) -> int:
     if args.check:
         if not args.out.exists() or args.out.read_text() != text:
             stale.append(f"{args.out} (vs core/carry_ins.py)")
-        if not NUMERICS_DOC.exists():
-            stale.append(f"{NUMERICS_DOC} (missing)")
-        else:
-            cur = NUMERICS_DOC.read_text()
+        for doc, splice, src in (
+            (NUMERICS_DOC, splice_presets, "repro.numerics presets"),
+            (OBSERVABILITY_DOC, splice_metrics,
+             "repro.serving.telemetry METRIC_CATALOG"),
+        ):
+            if not doc.exists():
+                stale.append(f"{doc} (missing)")
+                continue
+            cur = doc.read_text()
             try:
-                if splice_presets(cur) != cur:
-                    stale.append(f"{NUMERICS_DOC} (vs repro.numerics presets)")
+                if splice(cur) != cur:
+                    stale.append(f"{doc} (vs {src})")
             except ValueError as e:
                 print(e)
                 return 1
@@ -347,21 +399,26 @@ def main(argv=None) -> int:
             for s in stale:
                 print(f"STALE: {s}; run `python scripts/gen_docs.py`")
             return 1
-        print(f"{args.out} and {NUMERICS_DOC} are up to date")
+        print(f"{args.out}, {NUMERICS_DOC} and {OBSERVABILITY_DOC} are "
+              "up to date")
         return 0
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(text)
     print(f"wrote {args.out}")
-    if not NUMERICS_DOC.exists():
-        print(f"ERROR: {NUMERICS_DOC} does not exist; restore it (with the "
-              f"{PRESETS_BEGIN} / {PRESETS_END} markers) from git")
-        return 1
-    try:
-        NUMERICS_DOC.write_text(splice_presets(NUMERICS_DOC.read_text()))
-    except ValueError as e:
-        print(e)
-        return 1
-    print(f"wrote {NUMERICS_DOC} (preset table)")
+    for doc, splice, what in (
+        (NUMERICS_DOC, splice_presets, "preset table"),
+        (OBSERVABILITY_DOC, splice_metrics, "metric catalog"),
+    ):
+        if not doc.exists():
+            print(f"ERROR: {doc} does not exist; restore it (with its "
+                  "BEGIN/END GENERATED markers) from git")
+            return 1
+        try:
+            doc.write_text(splice(doc.read_text()))
+        except ValueError as e:
+            print(e)
+            return 1
+        print(f"wrote {doc} ({what})")
     return 0
 
 

@@ -27,6 +27,11 @@ Knobs (environment):
 The cache write is atomic (tmp file + rename) so concurrent processes at
 worst re-measure; measurement happens with explicit blocks, so the tuner
 never recurses into itself.
+
+Every answered query also publishes an ``autotune_block_us`` gauge
+(labels: kernel, site, config, source=measured|cached|heuristic) into the
+process-global telemetry registry, so the serve CLI's ``--metrics-out``
+exposition records which tilings this process actually ran with.
 """
 from __future__ import annotations
 
@@ -112,6 +117,28 @@ def _lookup(key: str, legacy_key: str, interpret: bool):
     return cache.get(legacy_key)
 
 
+def _fmt_config(config) -> str:
+    if isinstance(config, (tuple, list)):
+        return "x".join(str(c) for c in config)
+    return str(config)
+
+
+def _publish(kernel: str, site: str, config, best_s: Optional[float],
+             source: str) -> None:
+    """Mirror one tuning decision into the process-global telemetry
+    registry as ``autotune_block_us{kernel, site, config, source}``.
+
+    Lazy import keeps the kernels package importable without the serving
+    package; ``best_s=None`` (cached / heuristic answers, where nothing
+    was timed in this process) publishes the sentinel -1.0."""
+    try:
+        from ..serving.telemetry import record_autotune
+    except Exception:  # pragma: no cover - serving pkg absent
+        return
+    record_autotune(kernel, site, _fmt_config(config),
+                    -1.0 if best_s is None else best_s * 1e6, source)
+
+
 def _should_measure(interpret: bool) -> bool:
     env = os.environ.get("REPRO_AUTOTUNE", "").lower()
     if env in ("0", "off", "never"):
@@ -130,7 +157,8 @@ def _time_call(fn, n: int = 5, warmup: int = 2) -> float:
     return (time.perf_counter() - t0) / n
 
 
-def _measure_best(key: str, candidates: Sequence[tuple], make_fn, fallback):
+def _measure_best(key: str, candidates: Sequence[tuple], make_fn, fallback,
+                  *, kernel: str = "", site: str = ""):
     """Time each candidate, cache and return the fastest (first on tie).
 
     Only a config that actually ran is persisted; if every candidate fails
@@ -146,7 +174,11 @@ def _measure_best(key: str, candidates: Sequence[tuple], make_fn, fallback):
         if t < best_t:
             best, best_t = cand, t
     if best is None:
+        if kernel:
+            _publish(kernel, site, fallback, None, "heuristic")
         return fallback
+    if kernel:
+        _publish(kernel, site, best, best_t, "measured")
     _store(key, best)
     return best
 
@@ -202,9 +234,13 @@ def matmul_blocks(
     key = f"matmul|{backend}|{_device_kind()}|{tail}"
     cached = _lookup(key, f"matmul|{backend}|{tail}", interpret)
     if cached is not None:
-        return _norm(cached)
+        blocks = _norm(cached)
+        _publish("matmul", tail, blocks, None, "cached")
+        return blocks
     if not _should_measure(interpret):
-        return _norm(_matmul_default(M, N, K, impl, interpret))
+        blocks = _norm(_matmul_default(M, N, K, impl, interpret))
+        _publish("matmul", tail, blocks, None, "heuristic")
+        return blocks
 
     from .lns_matmul import lns_matmul
 
@@ -217,7 +253,8 @@ def matmul_blocks(
                                   blocks=blocks, interpret=interpret)
 
     return _norm(_measure_best(key, _matmul_candidates(M, N, K, impl), make_fn,
-                               _matmul_default(M, N, K, impl, interpret)))
+                               _matmul_default(M, N, K, impl, interpret),
+                               kernel="matmul", site=tail))
 
 
 def choose_matmul_impl(
@@ -239,9 +276,12 @@ def choose_matmul_impl(
     key = f"impl|{backend}|{_device_kind()}|{tail}"
     cached = _lookup(key, f"impl|{backend}|{tail}", interpret)
     if cached is not None:
+        _publish("matmul_impl", tail, cached, None, "cached")
         return cached
     if not _should_measure(interpret):
-        return "fused_dequant"  # MXU path: the safe default on accelerators
+        # MXU path: the safe default on accelerators
+        _publish("matmul_impl", tail, "fused_dequant", None, "heuristic")
+        return "fused_dequant"
 
     from .lns_matmul import lns_matmul
 
@@ -257,6 +297,8 @@ def choose_matmul_impl(
             continue
         if t < best_t:
             best, best_t = impl, t
+    _publish("matmul_impl", tail, best,
+             best_t if best_t < float("inf") else None, "measured")
     _store(key, best)
     return best
 
@@ -279,8 +321,10 @@ def elementwise_block_rows(
     key = f"elemwise|{backend}|{_device_kind()}|{tail}"
     cached = _lookup(key, f"elemwise|{backend}|{tail}", interpret)
     if cached is not None:
+        _publish("elemwise", tail, int(cached), None, "cached")
         return int(cached)
     if not _should_measure(interpret):
+        _publish("elemwise", tail, 256, None, "heuristic")
         return 256
 
     from .fp8_elementwise import fp8_elementwise
@@ -295,7 +339,8 @@ def elementwise_block_rows(
                                        mode=mode, block_rows=block_rows,
                                        interpret=interpret)
 
-    best = _measure_best(key, _elementwise_candidates(rows), make_fn, 256)
+    best = _measure_best(key, _elementwise_candidates(rows), make_fn, 256,
+                         kernel="elemwise", site=tail)
     return int(best) if not isinstance(best, tuple) else int(best[0])
 
 
@@ -311,12 +356,14 @@ def flash_blocks(
     key = f"flash|{backend}|{_device_kind()}|{tail}"
     cached = _lookup(key, f"flash|{backend}|{tail}", interpret)
     if cached is not None:
+        _publish("flash", tail, tuple(cached), None, "cached")
         return tuple(cached)
     # mirror the kernel's historical guard: shrink to the sequence length
     # only when it is itself sublane-aligned, otherwise keep 128 + padding
     default = (min(128, Sq) if Sq % 8 == 0 else 128,
                min(128, Sk) if Sk % 8 == 0 else 128)
     if not _should_measure(interpret):
+        _publish("flash", tail, default, None, "heuristic")
         return default
 
     from .flash_attention import flash_attention
@@ -332,4 +379,5 @@ def flash_blocks(
         bq, bk = cand
         return lambda: flash_attention(q, k, v, bq=bq, bk=bk, interpret=interpret)
 
-    return tuple(_measure_best(key, candidates, make_fn, default))
+    return tuple(_measure_best(key, candidates, make_fn, default,
+                               kernel="flash", site=tail))

@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import argparse
 import hashlib
-import time
 from collections import Counter
 from typing import Dict, List, Optional, Tuple
 
@@ -63,6 +62,7 @@ from ..models import Model
 from ..serving import ContinuousScheduler, PagePool, Request
 from ..serving.page_pool import invariant_checks_enabled
 from ..serving.scheduler import CANCELLED, FINISHED, REJECTED, TIMED_OUT
+from ..serving.telemetry import Telemetry, default_registry
 
 
 def cache_bytes(tree) -> int:
@@ -87,8 +87,12 @@ class Engine:
                  cache_impl: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None, rng_seed: int = 0,
                  stochastic_kv: Optional[bool] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
+        # Phase spans (prefill/decode/kv_write/host) land here; the
+        # scheduler shares the same registry (see ContinuousScheduler).
+        self.tel = telemetry if telemetry is not None else Telemetry()
         self.model = Model(cfg, max_seq=max_seq)
         self.max_seq = max_seq
         self.slots = slots
@@ -290,12 +294,13 @@ class Engine:
             toks = np.zeros((self.slots, chunk), np.int32)
             lengths = np.zeros((self.slots,), np.int32)
             n_new = np.zeros((self.slots,), np.int32)
-            for slot, (prompt, done) in state.items():
-                n = min(chunk, prompt.shape[0] - done)
-                toks[slot, :n] = prompt[done:done + n]
-                lengths[slot] = done
-                n_new[slot] = n
-                self.pool.ensure_capacity(slot, done + n)
+            with self.tel.span("host"):
+                for slot, (prompt, done) in state.items():
+                    n = min(chunk, prompt.shape[0] - done)
+                    toks[slot, :n] = prompt[done:done + n]
+                    lengths[slot] = done
+                    n_new[slot] = n
+                    self.pool.ensure_capacity(slot, done + n)
             logits = self.step_chunk(toks, lengths, n_new)
             for slot in list(state):
                 prompt, done = state[slot]
@@ -335,7 +340,9 @@ class Engine:
                 }
 
             self._cow_fn = jax.jit(cow)
-        self.cache = self._cow_fn(self.cache, jnp.int32(old), jnp.int32(new))
+        with self.tel.span("kv_write", kind="cow", src=old, dst=new):
+            self.cache = self._cow_fn(self.cache, jnp.int32(old),
+                                      jnp.int32(new))
 
     def _assert_writable(self, lengths: np.ndarray, n_new: np.ndarray) -> None:
         """Host-side guard behind the device-side write mask: every page an
@@ -457,37 +464,41 @@ class Engine:
         assert all(p.shape[0] == plen for p in prompts), "bucket by length"
         img_off = cfg.n_img_tokens if cfg.family == "vlm" else 0
         plen_total = plen + img_off
-        logits, small = self._prefill(
-            self.params, self._prefill_batch_inputs(prompts)
-        )
-        splice, npages = self._splice_fn(n, plen_total)
-        if self.cache_impl == "paged":
-            page_ids = np.zeros((n, npages), np.int32)
-            for i, slot in enumerate(slots):
-                page_ids[i] = self.pool.alloc(slot, npages)
-        else:
-            page_ids = np.zeros((n, 1), np.int32)
+        with self.tel.span("prefill", n=n, plen=plen_total):
+            logits, small = self._prefill(
+                self.params, self._prefill_batch_inputs(prompts)
+            )
+        with self.tel.span("host"):
+            splice, npages = self._splice_fn(n, plen_total)
+            if self.cache_impl == "paged":
+                page_ids = np.zeros((n, npages), np.int32)
+                for i, slot in enumerate(slots):
+                    page_ids[i] = self.pool.alloc(slot, npages)
+            else:
+                page_ids = np.zeros((n, 1), np.int32)
         # NOTE: splice-written page codes are step/batch-addressed (the
         # splice stream folds the engine step), NOT content-pure, so they
         # are never registered in the prefix index — with the prefix cache
         # on, run_bucketed routes every admission through the
         # position-addressed chunked pipeline instead of this path.
-        self.cache = splice(
-            self.cache, small, jnp.asarray(np.asarray(slots, np.int32)),
-            jnp.asarray(page_ids), self._splice_key(),
-        )
+        with self.tel.span("kv_write", kind="splice", n=n, plen=plen_total):
+            self.cache = splice(
+                self.cache, small, jnp.asarray(np.asarray(slots, np.int32)),
+                jnp.asarray(page_ids), self._splice_key(),
+            )
         first = np.argmax(np.asarray(logits[:, : cfg.vocab]), axis=-1)
         return first, plen_total
 
     # ------------------------------------------------------------------ #
     def decode(self, tokens: np.ndarray, pos: np.ndarray):
         """Dense decode step; ``pos`` is the per-slot position vector."""
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(pos, jnp.int32),
-        )
-        self._step += 1
-        return np.asarray(logits[:, : self.cfg.vocab])
+        with self.tel.span("decode"):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(pos, jnp.int32),
+            )
+            self._step += 1
+            return np.asarray(logits[:, : self.cfg.vocab])
 
     def decode_paged(self, tokens: np.ndarray, lengths: np.ndarray):
         """Paged decode step; allocates fresh pages for slots crossing a
@@ -497,19 +508,21 @@ class Engine:
         maps shared prefix pages cannot corrupt them."""
         lengths = np.asarray(lengths)
         active = lengths > 0
-        for slot in range(self.slots):
-            if active[slot]:
-                self.pool.ensure_capacity(slot, int(lengths[slot]) + 1)
-        self._assert_writable(lengths, active.astype(np.int32))
-        logits, self.cache = self._decode_paged(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(lengths, jnp.int32),
-            jnp.asarray(self.pool.block_tables),
-            page_size=self.page_size, key=self._token_key,
-            active=jnp.asarray(active),
-        )
-        self._step += 1
-        return np.asarray(logits[:, : self.cfg.vocab])
+        with self.tel.span("host"):
+            for slot in range(self.slots):
+                if active[slot]:
+                    self.pool.ensure_capacity(slot, int(lengths[slot]) + 1)
+            self._assert_writable(lengths, active.astype(np.int32))
+        with self.tel.span("decode"):
+            logits, self.cache = self._decode_paged(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(lengths, jnp.int32),
+                jnp.asarray(self.pool.block_tables),
+                page_size=self.page_size, key=self._token_key,
+                active=jnp.asarray(active),
+            )
+            self._step += 1
+            return np.asarray(logits[:, : self.cfg.vocab])
 
     def step_chunk(self, tokens: np.ndarray, lengths: np.ndarray,
                    n_new: np.ndarray):
@@ -525,15 +538,21 @@ class Engine:
         device-side in the model).  Returns each slot's last-valid-token
         logits [slots, vocab].
         """
-        self._assert_writable(np.asarray(lengths), np.asarray(n_new))
-        logits, self.cache = self._mixed_step(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(lengths, jnp.int32), jnp.asarray(n_new, jnp.int32),
-            jnp.asarray(self.pool.block_tables),
-            page_size=self.page_size, key=self._token_key,
-        )
-        self._step += 1
-        return np.asarray(logits[:, : self.cfg.vocab])
+        with self.tel.span("host"):
+            self._assert_writable(np.asarray(lengths), np.asarray(n_new))
+        # a step carrying any prefill chunk is charged to "prefill" (the
+        # chunk dominates its T=chunk trace); pure decode steps to "decode"
+        phase = "decode" if all(int(n) <= 1 for n in n_new) else "prefill"
+        with self.tel.span(phase):
+            logits, self.cache = self._mixed_step(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(lengths, jnp.int32),
+                jnp.asarray(n_new, jnp.int32),
+                jnp.asarray(self.pool.block_tables),
+                page_size=self.page_size, key=self._token_key,
+            )
+            self._step += 1
+            return np.asarray(logits[:, : self.cfg.vocab])
 
     # ------------------------------------------------------------------ #
     def _map_entries(self, fn):
@@ -555,6 +574,10 @@ class Engine:
         system prompt moves no bytes for the shared pages.  The copies are
         verbatim — never re-quantized — so a later :meth:`restore_slot` is
         bit-identical.  Returns the spill record."""
+        with self.tel.span("preempt", slot=slot):
+            return self._preempt_slot(slot)
+
+    def _preempt_slot(self, slot: int) -> dict:
         spilled, pinned = self.pool.spill_plan(slot)
         ids = jnp.asarray(np.asarray(spilled, np.int32))
 
@@ -586,6 +609,10 @@ class Engine:
         for the exclusive contents (ids may differ from the spilled ones),
         scatter the saved codes, scales and dense rows back, and
         re-reference the pinned prefix pages at their logical indices."""
+        with self.tel.span("restore", slot=slot):
+            self._restore_slot(slot, record)
+
+    def _restore_slot(self, slot: int, record: dict) -> None:
         new_ids = self.pool.restore_slot(
             slot, record["n_pages"], record.get("pinned", ())
         )
@@ -726,15 +753,19 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
     statuses: Dict[int, tuple] = {}  # rid -> (terminal state, reason)
     terminal = Counter()
     next_req = 0
-    t0 = time.time()
+    tel = eng.tel
+    clock = tel.clock  # monotonic: elapsed-time math must not see wall
+    t0 = clock()       # clock jumps (NTP slew, DST)
     steps = 0
     decoded_tokens = 0
+    decode_wall_s = 0.0  # pure-decode device time (decode-only tok/s)
     occupied_slot_steps = 0
     prefix_hit_tokens = 0
 
     def finish(rid: int, state: str, reason: str = "") -> None:
         statuses[rid] = (state, reason)
         terminal[state] += 1
+        tel.counter("serve_requests_total", state=state).inc()
 
     def arrival_of(rid: int) -> int:
         return 0 if arrivals is None else int(arrivals[rid])
@@ -745,87 +776,92 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         if (deadline_steps is not None
                 and steps - arrival_of(rid) >= deadline_steps):
             return TIMED_OUT
-        if deadline_s is not None and time.time() - t0 > deadline_s:
+        if deadline_s is not None and clock() - t0 > deadline_s:
             return TIMED_OUT
         return None
 
     while len(statuses) < requests:
-        # ---- deadline/cancellation sweep over the active slots -------- #
-        for slot, st in list(active.items()):
-            state = expired(st["rid"])
-            if state is not None:
-                finish(st["rid"], state,
-                       "cancelled by client" if state == CANCELLED
-                       else "deadline exhausted")
-                del active[slot]
-                reserved.pop(slot, None)
-                eng.release(slot)
-        # ---- batched admission into every free slot ------------------- #
-        # Admission control reserves each request's worst-case page count
-        # (prompt + full generation budget) so decode can never exhaust the
-        # pool mid-flight; pages themselves are still allocated lazily.
-        # With the prefix cache on, the reservation stays the conservative
-        # full worst case (shared pages double-count, never under-count),
-        # and EVERY admission — hit or miss — prefills through the
-        # position-addressed chunked pipeline (Engine.tail_prefill, start
-        # = matched length): registered pages must be content-pure, which
-        # the step-keyed batched splice cannot provide.  Hits map their
-        # cached pages read-only and prefill only the uncached tail.
-        admit_slots, admit_prompts, admit_rids = [], [], []
-        chunked_admissions = []  # (slot, rid, prompt, n_cached)
-        for slot in range(eng.slots):
-            if slot in active:
-                continue
-            # Drain terminal queue heads before admitting into this slot:
-            # already-cancelled/expired requests, and requests whose worst
-            # case cannot fit an EMPTY pool (or one slot's block table) —
-            # each is terminated *individually*, holding no slot or pages,
-            # instead of crashing the run with earlier admissions' pages
-            # already taken.
-            while next_req < requests:
+        with tel.span("admit"):
+            # ---- deadline/cancellation sweep over the active slots ---- #
+            for slot, st in list(active.items()):
+                state = expired(st["rid"])
+                if state is not None:
+                    finish(st["rid"], state,
+                           "cancelled by client" if state == CANCELLED
+                           else "deadline exhausted")
+                    del active[slot]
+                    reserved.pop(slot, None)
+                    eng.release(slot)
+            # ---- batched admission into every free slot --------------- #
+            # Admission control reserves each request's worst-case page
+            # count (prompt + full generation budget) so decode can never
+            # exhaust the pool mid-flight; pages themselves are still
+            # allocated lazily.  With the prefix cache on, the reservation
+            # stays the conservative full worst case (shared pages
+            # double-count, never under-count), and EVERY admission — hit
+            # or miss — prefills through the position-addressed chunked
+            # pipeline (Engine.tail_prefill, start = matched length):
+            # registered pages must be content-pure, which the step-keyed
+            # batched splice cannot provide.  Hits map their cached pages
+            # read-only and prefill only the uncached tail.
+            admit_slots, admit_prompts, admit_rids = [], [], []
+            chunked_admissions = []  # (slot, rid, prompt, n_cached)
+            for slot in range(eng.slots):
+                if slot in active:
+                    continue
+                # Drain terminal queue heads before admitting into this
+                # slot: already-cancelled/expired requests, and requests
+                # whose worst case cannot fit an EMPTY pool (or one slot's
+                # block table) — each is terminated *individually*,
+                # holding no slot or pages, instead of crashing the run
+                # with earlier admissions' pages already taken.
+                while next_req < requests:
+                    if arrivals is not None and arrivals[next_req] > steps:
+                        break  # FIFO: the next request has not arrived yet
+                    state = expired(next_req)
+                    if state is not None:
+                        finish(next_req, state,
+                               "cancelled by client" if state == CANCELLED
+                               else "deadline exhausted before admission")
+                        next_req += 1
+                        continue
+                    if eng.pool is not None:
+                        worst = eng.pool.pages_needed(
+                            queue[next_req].shape[0] + img_off + gen
+                        )
+                        usable = min(eng.pool.num_pages - 1,
+                                     eng.pool.max_pages_per_slot)
+                        if worst > usable:
+                            finish(next_req, REJECTED,
+                                   f"needs {worst} pages but the pool "
+                                   f"serves at most {usable} per request; "
+                                   f"raise --pages or lower "
+                                   f"--gen/--prompt-len")
+                            next_req += 1
+                            if invariant_checks_enabled():
+                                eng.pool.assert_invariants()
+                            continue
+                    break
+                if next_req >= requests:
+                    break
                 if arrivals is not None and arrivals[next_req] > steps:
                     break  # FIFO: the next request has not arrived yet
-                state = expired(next_req)
-                if state is not None:
-                    finish(next_req, state,
-                           "cancelled by client" if state == CANCELLED
-                           else "deadline exhausted before admission")
-                    next_req += 1
-                    continue
+                prompt = queue[next_req]
                 if eng.pool is not None:
                     worst = eng.pool.pages_needed(
-                        queue[next_req].shape[0] + img_off + gen
-                    )
-                    usable = min(eng.pool.num_pages - 1,
-                                 eng.pool.max_pages_per_slot)
-                    if worst > usable:
-                        finish(next_req, REJECTED,
-                               f"needs {worst} pages but the pool serves "
-                               f"at most {usable} per request; raise "
-                               f"--pages or lower --gen/--prompt-len")
-                        next_req += 1
-                        if invariant_checks_enabled():
-                            eng.pool.assert_invariants()
-                        continue
-                break
-            if next_req >= requests:
-                break
-            if arrivals is not None and arrivals[next_req] > steps:
-                break  # FIFO: the next request has not arrived yet
-            prompt = queue[next_req]
-            if eng.pool is not None:
-                worst = eng.pool.pages_needed(prompt.shape[0] + img_off + gen)
-                if sum(reserved.values()) + worst > eng.pool.num_pages - 1:
-                    break  # wait for in-flight requests to free pages
-                reserved[slot] = worst
-            n_cached = eng.admit_prefix(slot, prompt)
-            if eng.prefix_cache:
-                chunked_admissions.append((slot, next_req, prompt, n_cached))
-            else:
-                admit_slots.append(slot)
-                admit_prompts.append(prompt)
-                admit_rids.append(next_req)
-            next_req += 1
+                        prompt.shape[0] + img_off + gen)
+                    if sum(reserved.values()) + worst > eng.pool.num_pages - 1:
+                        break  # wait for in-flight requests to free pages
+                    reserved[slot] = worst
+                n_cached = eng.admit_prefix(slot, prompt)
+                if eng.prefix_cache:
+                    chunked_admissions.append(
+                        (slot, next_req, prompt, n_cached))
+                else:
+                    admit_slots.append(slot)
+                    admit_prompts.append(prompt)
+                    admit_rids.append(next_req)
+                next_req += 1
         if admit_prompts:
             # bucket by prompt length: each bucket is one batched prefill
             by_len: Dict[int, List[int]] = {}
@@ -852,6 +888,7 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
             for slot, rid, prompt, n_cached in chunked_admissions:
                 first = int(np.argmax(rows[slot][: eng.cfg.vocab]))
                 prefix_hit_tokens += n_cached
+                tel.counter("serve_prefix_hit_tokens_total").inc(n_cached)
                 active[slot] = dict(rid=rid, pos=prompt.shape[0] + img_off,
                                     out=[first], last=first)
                 if on_token is not None:
@@ -870,15 +907,20 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         for slot, st in active.items():
             toks[slot] = st["last"]
             pos[slot] = st["pos"]
+        t_dec = clock()
         if eng.cache_impl == "paged":
             logits = eng.decode_paged(toks, pos)
         else:
             logits = eng.decode(toks, pos)
+        decode_wall_s += clock() - t_dec
         steps += 1
+        tel.counter("serve_steps_total").inc()
         decoded_tokens += len(active)
+        tel.counter("serve_decoded_tokens_total").inc(len(active))
         occupied_slot_steps += len(active)
         if eng.pool is not None:
             eng.pool.observe_step()
+            eng.pool.publish_telemetry(tel)
         nxt = sample(logits, temperature, rng)
         done = []
         for slot, st in list(active.items()):
@@ -898,10 +940,15 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         if invariant_checks_enabled() and eng.pool is not None:
             eng.pool.assert_invariants()
 
-    dt = time.time() - t0
+    dt = clock() - t0
     stats = dict(
         steps=steps, wall_s=dt,
+        # end-to-end throughput (prefill + admission + host time folded
+        # in) vs decode-only throughput (device decode-step time alone)
         tok_s=decoded_tokens / dt if dt > 0 else 0.0,
+        decode_tok_s=(decoded_tokens / decode_wall_s
+                      if decode_wall_s > 0 else 0.0),
+        decode_wall_s=decode_wall_s,
         slot_occupancy=occupied_slot_steps / max(steps * eng.slots, 1),
         preemptions=0,
         shed=0,
@@ -910,13 +957,16 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         prefix_hit_tokens=prefix_hit_tokens,
         cache_bytes=eng.kv_cache_bytes(),
         cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
+        phases=tel.phase_seconds(),
+        telemetry=tel,
     )
     if eng.pool is not None:
         stats["page_utilization"] = eng.pool.mean_utilization()
         stats["prefix"] = eng.pool.prefix_stats()
     if not quiet:
         print(f"[serve:bucketed:{eng.cache_impl}] {requests} requests, "
-              f"{steps} decode steps, {stats['tok_s']:.1f} tok/s, "
+              f"{steps} decode steps, {stats['tok_s']:.1f} tok/s e2e "
+              f"({stats['decode_tok_s']:.1f} decode-only), "
               f"occupancy {stats['slot_occupancy']:.2f}, cache "
               f"{stats['cache_bytes'] / 1e6:.2f} MB "
               f"({stats['cache_bytes_per_token']:.0f} B/token capacity)")
@@ -963,29 +1013,42 @@ def run_continuous(eng: Engine, queue: List[np.ndarray], *, gen: int,
             arrival=0 if arrivals is None else int(arrivals[i]),
             deadline_steps=deadline_steps, deadline_s=deadline_s,
         ))
-    t0 = time.time()
+    tel = sched.tel
+    t0 = tel.clock()  # monotonic (elapsed math must not see wall jumps)
     outputs = sched.run()
-    dt = time.time() - t0
+    dt = tel.clock() - t0
     stats = dict(
         steps=sched.steps, wall_s=dt,
+        # end-to-end throughput (prefill + admission + host time folded
+        # in) vs decode-only throughput (device time of pure-decode
+        # steps; the ambiguity satellite in BENCH_4's prefix-ON number)
         tok_s=sched.decoded_tokens / dt if dt > 0 else 0.0,
+        decode_tok_s=(sched.decode_step_tokens / sched.decode_wall_s
+                      if sched.decode_wall_s > 0 else 0.0),
+        decode_wall_s=sched.decode_wall_s,
+        prefill_wall_s=sched.prefill_wall_s,
         prefill_tokens=sched.prefill_tokens,
         prefix_hit_tokens=sched.prefix_hit_tokens,
         prefix=eng.pool.prefix_stats(),
         slot_occupancy=sched.occupied_slot_steps / max(sched.steps * eng.slots, 1),
         mean_latency_steps=sched.mean_latency_steps(),
         preemptions=sched.preemptions,
+        restores=sched.restores,
         shed=sched.shed,
         admission_pauses=sched.admission_pauses,
         terminal=dict(sched.terminal_counts),
         statuses=sched.statuses(),
+        requests=sched.request_traces(),
         page_utilization=eng.pool.mean_utilization(),
         cache_bytes=eng.kv_cache_bytes(),
         cache_bytes_per_token=eng.kv_cache_bytes() / max(eng.kv_capacity_tokens(), 1),
+        phases=tel.phase_seconds(),
+        telemetry=tel,
     )
     if not quiet:
         print(f"[serve:continuous:{eng.cache_impl}] {len(queue)} requests, "
-              f"{sched.steps} steps, {stats['tok_s']:.1f} tok/s, occupancy "
+              f"{sched.steps} steps, {stats['tok_s']:.1f} tok/s e2e "
+              f"({stats['decode_tok_s']:.1f} decode-only), occupancy "
               f"{stats['slot_occupancy']:.2f}, {sched.preemptions} "
               f"preemptions, cache {stats['cache_bytes'] / 1e6:.2f} MB "
               f"({stats['cache_bytes_per_token']:.0f} B/token capacity)")
@@ -1057,6 +1120,17 @@ def main(argv=None):
                          "admissions (continuous scheduler)")
     ap.add_argument("--watermark-low", type=float, default=0.75,
                     help="occupancy fraction that resumes admissions")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final Prometheus text exposition "
+                         "(counters/gauges/histograms; see "
+                         "docs/observability.md) to PATH")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of every "
+                         "phase span to PATH (open in chrome://tracing)")
+    ap.add_argument("--profile-spans", action="store_true",
+                    help="wrap each phase span in a "
+                         "jax.profiler.TraceAnnotation so host phases "
+                         "line up with device traces")
     args = ap.parse_args(argv)
 
     if args.policy is not None:
@@ -1092,6 +1166,7 @@ def main(argv=None):
         cache_impl=args.cache_impl, page_size=args.page_size,
         num_pages=args.pages or None, rng_seed=args.seed,
         prefix_cache=prefix_on,
+        telemetry=Telemetry(profile=args.profile_spans),
     )
     rng = np.random.default_rng(args.seed)
     shared = (rng.integers(0, cfg.vocab, size=args.shared_prefix)
@@ -1123,6 +1198,21 @@ def main(argv=None):
     for rid, (state, reason) in sorted(stats.get("statuses", {}).items()):
         if state != "finished":
             print(f"  req{rid}: {state} ({reason})")
+    tel = stats.get("telemetry", eng.tel)
+    if args.metrics_out:
+        # the engine's registry plus the process-global one (autotune
+        # gauges fire under jit tracing, before any Engine exists)
+        from ..serving.telemetry import _atomic_write
+
+        text = tel.to_prometheus()
+        extra = default_registry().to_prometheus()
+        if extra and default_registry() is not tel:
+            text += extra
+        _atomic_write(args.metrics_out, text)
+        print(f"# metrics -> {args.metrics_out}")
+    if args.trace_out:
+        tel.write_chrome_trace(args.trace_out)
+        print(f"# trace -> {args.trace_out}")
     return outputs
 
 

@@ -260,7 +260,9 @@ def run_serving(
     restarts = 0
     overruns = 0
     snapshots = 0
-    t0 = time.time()
+    # elapsed-time math runs on the telemetry (monotonic) clock; only the
+    # heartbeat file persists absolute wall-clock time for orchestrators
+    t0 = sched.tel.clock()
     while sched.pending():
         try:
             if watchdog is not None:
@@ -272,6 +274,7 @@ def run_serving(
             # the overrun step's work is already committed: degrade, don't
             # die (a real deployment would also flag this host)
             overruns += 1
+            sched.tel.counter("fault_watchdog_overruns_total").inc()
             log(f"[serve:fault] step {sched.steps} overran: {e}")
         except EngineKilled as e:
             restarts += 1
@@ -285,15 +288,32 @@ def run_serving(
                 chaos = dataclasses.replace(chaos, kill_at_step=None)
             eng, sched = build()
             if ckpt_dir is not None and store.latest_step(ckpt_dir) is not None:
-                step = load_snapshot(ckpt_dir, eng, sched, sampler_rng=rng)
+                t_restore = sched.tel.clock()
+                with sched.tel.span("snapshot_restore"):
+                    step = load_snapshot(ckpt_dir, eng, sched,
+                                         sampler_rng=rng)
+                sched.tel.histogram("snapshot_restore_seconds").observe(
+                    sched.tel.clock() - t_restore)
+                sched.tel.counter("snapshot_restores_total").inc()
                 log(f"[serve:fault] restored snapshot at step {step}")
             else:
                 rng = np.random.default_rng(seed)  # cold restart: replay
                 seed_requests(sched)
+            # counted AFTER the restore: the snapshot's telemetry state
+            # replaced the fresh registry (cumulative truth from the
+            # restore point), and the restart just survived goes on top
+            sched.tel.counter("fault_restarts_total").inc()
             if harness is not None:
                 counts = harness.counts  # survive the rebuild
                 harness = ChaosHarness(sched, chaos, watchdog)
                 harness.counts = counts
+                # faults injected between the last snapshot and the kill
+                # (the kill itself included) are newer than the restored
+                # registry; the in-memory tally is the truth — re-mirror it
+                for kind, v in counts.items():
+                    if v:
+                        sched.tel.counter(
+                            "chaos_faults_total", kind=kind).value = float(v)
             continue
         if (heartbeat_path is not None
                 and sched.steps % max(heartbeat_every, 1) == 0):
@@ -308,25 +328,35 @@ def run_serving(
             })
         if (ckpt_dir is not None and snapshot_every > 0
                 and sched.steps % snapshot_every == 0 and sched.pending()):
-            save_snapshot(
-                ckpt_dir, eng, sched,
-                sampler_rng=rng if temperature > 0 else None,
-            )
+            t_save = sched.tel.clock()
+            with sched.tel.span("snapshot_save"):
+                save_snapshot(
+                    ckpt_dir, eng, sched,
+                    sampler_rng=rng if temperature > 0 else None,
+                )
+            sched.tel.histogram("snapshot_save_seconds").observe(
+                sched.tel.clock() - t_save)
+            sched.tel.counter("snapshot_saves_total").inc()
             snapshots += 1
     if harness is not None:
         harness.release_all_seizures()
-    dt = time.time() - t0
+    dt = sched.tel.clock() - t0
     stats = dict(
         steps=sched.steps, wall_s=dt,
         tok_s=sched.decoded_tokens / dt if dt > 0 else 0.0,
+        decode_tok_s=(sched.decode_step_tokens / sched.decode_wall_s
+                      if sched.decode_wall_s > 0 else 0.0),
         preemptions=sched.preemptions,
         shed=sched.shed,
         terminal=dict(sched.terminal_counts),
         statuses=sched.statuses(),
+        requests=sched.request_traces(),
         restarts=restarts,
         watchdog_overruns=overruns,
         snapshots=snapshots,
         restored_from=restored_from,
         chaos=dict(harness.counts) if harness is not None else None,
+        phases=sched.tel.phase_seconds(),
+        telemetry=sched.tel,
     )
     return sched.outputs, stats

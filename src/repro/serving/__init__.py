@@ -36,6 +36,7 @@ from .scheduler import (
     ServeControl,
 )
 from .snapshot import load_snapshot, save_snapshot
+from .telemetry import METRIC_CATALOG, PHASES, Telemetry, default_registry
 
 __all__ = [
     "CANCELLED",
@@ -45,12 +46,16 @@ __all__ = [
     "FAILED",
     "FINISHED",
     "FaultPlan",
+    "METRIC_CATALOG",
+    "PHASES",
     "PagePool",
     "REJECTED",
     "Request",
     "ServeControl",
     "TERMINAL_STATES",
     "TIMED_OUT",
+    "Telemetry",
+    "default_registry",
     "encode_kv",
     "invariant_checks_enabled",
     "load_snapshot",

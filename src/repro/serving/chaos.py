@@ -40,6 +40,8 @@ from typing import Optional
 
 import numpy as np
 
+from .telemetry import Telemetry
+
 __all__ = ["FaultPlan", "ChaosHarness", "EngineKilled"]
 
 
@@ -97,6 +99,14 @@ class ChaosHarness:
         self.counts = {"exhaustion": 0, "storm": 0, "corruption": 0,
                        "overrun": 0, "killed": 0}
         self._seizures: list = []  # (release_at_step, [page ids])
+        # injected faults land in the scheduler's registry so the chaos
+        # timeline interleaves with the phase spans in one trace
+        self.tel: Telemetry = getattr(sched, "tel", None) or Telemetry()
+
+    def _record(self, kind: str, **args) -> None:
+        self.counts[kind] += 1
+        self.tel.counter("chaos_faults_total", kind=kind).inc()
+        self.tel.event(f"chaos/{kind}", step=self.sched.steps, **args)
 
     # ------------------------------------------------------------------ #
     def _release_due(self) -> None:
@@ -120,14 +130,15 @@ class ChaosHarness:
         pool = self.sched.pool
         ids = pool.seize(self.plan.exhaustion_pages)
         if ids:
-            self.counts["exhaustion"] += 1
+            self._record("exhaustion", pages=len(ids),
+                         hold=self.plan.exhaustion_hold)
             self._seizures.append(
                 (self.sched.steps + self.plan.exhaustion_hold, ids)
             )
 
     def _inject_storm(self) -> None:
         if len(self.sched.active) > 1:
-            self.counts["storm"] += 1
+            self._record("storm", victims=len(self.sched.active) - 1)
         while len(self.sched.active) > 1:
             self.sched._preempt_victim()
 
@@ -144,7 +155,7 @@ class ChaosHarness:
         except AssertionError:
             pool.ref[pid] -= 1  # detected: repair and re-verify
             pool.assert_invariants()
-            self.counts["corruption"] += 1
+            self._record("corruption", page=pid)
             return
         pool.ref[pid] -= 1
         raise RuntimeError(
@@ -154,13 +165,13 @@ class ChaosHarness:
 
     def _inject_overrun(self) -> None:
         if self.watchdog is not None and self.watchdog.inject_overrun():
-            self.counts["overrun"] += 1
+            self._record("overrun")
 
     # ------------------------------------------------------------------ #
     def step(self) -> None:
         plan, sched = self.plan, self.sched
         if plan.kill_at_step is not None and sched.steps >= plan.kill_at_step:
-            self.counts["killed"] += 1
+            self._record("killed")
             raise EngineKilled(sched.steps)
         self._release_due()
         # one draw per fault kind, every step, whether or not it fires:

@@ -164,6 +164,27 @@ class PagePool:
             cow_copies=self.cow_copies,
         )
 
+    def publish_telemetry(self, tel) -> None:
+        """Publish pool occupancy gauges and mirror the cumulative event
+        counters into a :class:`~repro.serving.telemetry.Telemetry`
+        registry (the scheduler calls this once per step)."""
+        usable = max(self.num_pages - 1, 1)
+        tel.gauge("pool_pages").set(self.num_pages - 1)
+        tel.gauge("pool_free_pages").set(len(self._free))
+        tel.gauge("pool_used_pages").set(self.used_pages)
+        tel.gauge("pool_cached_pages").set(len(self._lru))
+        tel.gauge("pool_seized_pages").set(len(self._seized))
+        tel.gauge("pool_utilization").set(self.used_pages / usable)
+        # counters live on the pool (they already snapshot/restore through
+        # state_dict); the telemetry series mirrors their absolute values
+        for name, v in (("pool_prefix_lookups_total", self.prefix_lookups),
+                        ("pool_prefix_hits_total", self.prefix_hits),
+                        ("pool_evictions_total", self.evictions),
+                        ("pool_cow_copies_total", self.cow_copies),
+                        ("pool_spills_total", self.spills),
+                        ("pool_restores_total", self.restores)):
+            tel.counter(name).value = float(v)
+
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 

@@ -71,6 +71,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from .page_pool import invariant_checks_enabled
+from .telemetry import Telemetry
 
 __all__ = ["Request", "ContinuousScheduler", "ServeControl",
            "QUEUED", "PREFILL", "DECODE", "PREEMPTED",
@@ -136,6 +137,12 @@ class Request:
     deadline_s: Optional[float] = None  # wall-clock budget from add()
     finish_reason: str = ""  # why the terminal state was reached
     t_added: float = -1.0  # scheduler clock at add() (deadline_s anchor)
+    # --- lifecycle trace (telemetry; -1.0/-1 = never happened) ----------- #
+    admitted_step: int = -1  # step of first slot admission
+    first_token_step: int = -1  # step the first token was sampled
+    t_first_token: float = -1.0  # clock at first sampled token (TTFT anchor)
+    t_last_token: float = -1.0  # clock at latest token (inter-token anchor)
+    prefix_cached_tokens: int = 0  # prompt tokens mapped from the prefix cache
 
     @property
     def plen(self) -> int:
@@ -191,9 +198,18 @@ class ContinuousScheduler:
                  watermark_high: float = 1.0,
                  watermark_low: float = 0.75,
                  stall_limit: int = 256,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry: Optional[Telemetry] = None):
         self.eng = eng
         self.pool = eng.pool
+        # One registry per engine: the engine's spans (prefill/decode/
+        # kv_write) and the scheduler's lifecycle metrics must land in the
+        # same exposition/trace.  An explicit ``telemetry`` overrides both.
+        if telemetry is not None:
+            self.tel = telemetry
+            eng.tel = telemetry
+        else:
+            self.tel = getattr(eng, "tel", None) or Telemetry(clock=clock)
         self.chunk = max(1, int(chunk))
         self.sample = sample if sample is not None else (
             lambda row: int(np.argmax(row))
@@ -219,9 +235,16 @@ class ContinuousScheduler:
         self.prefix_hit_tokens = 0  # prompt tokens served from the cache
         self.occupied_slot_steps = 0
         self.preemptions = 0
+        self.restores = 0  # preempted requests resumed into a slot
         self.shed = 0  # load-shed adds (bounded-queue overflow)
         self.admission_pauses = 0  # watermark-high crossings
         self.terminal_counts: Counter = Counter()
+        # decode-only vs end-to-end throughput decomposition: wall time and
+        # tokens of pure-decode engine steps, vs steps with a prefill chunk
+        # in flight (telemetry clock; see stats["decode_tok_s"])
+        self.decode_wall_s = 0.0
+        self.decode_step_tokens = 0
+        self.prefill_wall_s = 0.0
         self._paused = False  # watermark admission pause (hysteresis)
         self._last_progress = 0  # last step a token was committed / admitted
 
@@ -237,9 +260,42 @@ class ContinuousScheduler:
         return bool(self.queued or self.preempted or self.active)
 
     def statuses(self) -> Dict[int, tuple]:
-        """rid -> (state, finish_reason) for every request ever added."""
+        """rid -> (state, finish_reason) for every request ever added.
+
+        Thin compatibility view over :meth:`request_traces`."""
         return {rid: (r.state, r.finish_reason)
                 for rid, r in self.by_rid.items()}
+
+    def request_traces(self) -> List[dict]:
+        """Structured per-request lifecycle records (rid order): the
+        source of truth behind ``stats`` and the statuses() view."""
+        out = []
+        for rid in sorted(self.by_rid):
+            r = self.by_rid[rid]
+            out.append({
+                "rid": rid,
+                "state": r.state,
+                "reason": r.finish_reason,
+                "arrival_step": r.arrival,
+                "admitted_step": r.admitted_step,
+                "first_token_step": r.first_token_step,
+                "finished_step": (r.finished_step
+                                  if r.state in TERMINAL_STATES else -1),
+                "queue_wait_steps": (r.admitted_step - r.arrival
+                                     if r.admitted_step >= 0 else -1),
+                "ttft_steps": (r.first_token_step - r.arrival
+                               if r.first_token_step >= 0 else -1),
+                "ttft_s": (r.t_first_token - r.t_added
+                           if r.t_first_token >= 0 and r.t_added >= 0
+                           else -1.0),
+                "tokens_out": len(r.out),
+                "prompt_tokens": r.plen,
+                "prefill_charged_tokens": max(
+                    0, r.n_prefilled - r.prefix_cached_tokens),
+                "prefix_cached_tokens": r.prefix_cached_tokens,
+                "preemptions": r.preemptions,
+            })
+        return out
 
     # ------------------------------------------------------------------ #
     # Terminal transitions: every path out of the live set goes through
@@ -252,6 +308,7 @@ class ContinuousScheduler:
         req.finished_step = self.steps
         self.finished.append(req)
         self.terminal_counts[state] += 1
+        self.tel.counter("serve_requests_total", state=state).inc()
         if state == FINISHED:
             self.outputs[req.rid] = req.out
 
@@ -310,6 +367,7 @@ class ContinuousScheduler:
             arrived = [r for r in self.queued if r.arrival <= self.steps]
             for req in arrived[self.max_queue:]:  # shed newest arrivals
                 self.shed += 1
+                self.tel.counter("serve_shed_total").inc()
                 self._terminate(req, REJECTED,
                                 f"queue full (load shed at {self.max_queue})")
 
@@ -343,6 +401,8 @@ class ContinuousScheduler:
             req.state = DECODE if req.n_prefilled >= req.plen else PREFILL
             self.preempted.remove(req)
             self.active[slot] = req
+            self.restores += 1
+            self.tel.counter("serve_restores_total").inc()
 
         # Watermark backpressure with hysteresis: pause NEW admissions when
         # pool occupancy crosses the high mark, resume below the low mark.
@@ -357,6 +417,7 @@ class ContinuousScheduler:
         elif frac >= self.watermark_high:
             self._paused = True
             self.admission_pauses += 1
+            self.tel.counter("serve_admission_pauses_total").inc()
         if self._paused:
             return
 
@@ -413,6 +474,12 @@ class ContinuousScheduler:
                                         hashes=req.prefix_hashes)
             req.n_prefilled = got
             self.prefix_hit_tokens += got
+            req.prefix_cached_tokens = got
+            self.tel.counter("serve_prefix_hit_tokens_total").inc(got)
+            if req.admitted_step < 0:  # first admission only (not resumes)
+                req.admitted_step = self.steps
+                self.tel.histogram("serve_queue_wait_steps").observe(
+                    self.steps - req.arrival)
             # the COW draw and the revivals are already reflected in the
             # live free_pages; keep charging only the unallocated tail
             charged += first - extra - revived
@@ -445,6 +512,7 @@ class ContinuousScheduler:
         victim.slot = -1
         victim.preemptions += 1
         self.preemptions += 1
+        self.tel.counter("serve_preemptions_total").inc()
         del self.active[slot]
         self.preempted.append(victim)
         return slot
@@ -495,11 +563,13 @@ class ContinuousScheduler:
     # ------------------------------------------------------------------ #
     def _commit(self, plan: Dict[int, tuple], logits: np.ndarray) -> None:
         finished = []
+        now = self.tel.clock()
         for slot, (_, n) in plan.items():
             req = self.active[slot]
             if req.state == PREFILL:
                 req.n_prefilled += n
                 self.prefill_tokens += n
+                self.tel.counter("serve_prefill_tokens_total").inc(n)
                 # publish newly completed prompt pages for later requests
                 self.eng.note_prefilled(slot, req.n_prefilled)
                 if req.n_prefilled < req.plen:
@@ -507,7 +577,18 @@ class ContinuousScheduler:
                 req.state = DECODE  # last prompt token's logits sample next
             else:
                 self.decoded_tokens += 1
+                self.tel.counter("serve_decoded_tokens_total").inc()
             tok = self.sample(logits[slot])
+            if req.first_token_step < 0:
+                req.first_token_step = self.steps
+                req.t_first_token = now
+                if req.t_added >= 0:
+                    self.tel.histogram("serve_ttft_seconds").observe(
+                        now - req.t_added)
+            elif req.t_last_token >= 0:
+                self.tel.histogram("serve_intertoken_seconds").observe(
+                    now - req.t_last_token)
+            req.t_last_token = now
             req.out.append(tok)
             if self.on_token is not None:
                 self.on_token(req.rid, tok, self.steps)
@@ -544,14 +625,17 @@ class ContinuousScheduler:
     def step(self) -> None:
         """One scheduler step: expire/cancel, admit, fit (maybe preempt),
         run the mixed model step, sample/stream, evict finished slots."""
-        self._expire()
-        self._admit()
-        plan = self._plan()
-        self._fit(plan)
+        with self.tel.span("admit"):
+            self._expire()
+            self._admit()
+        with self.tel.span("host"):
+            plan = self._plan()
+            self._fit(plan)
         if plan:
             # T is 1 on pure-decode steps and ``chunk`` whenever a prefill
             # is in flight — exactly two model traces for the whole run.
-            T = 1 if all(n == 1 for _, n in plan.values()) else self.chunk
+            pure_decode = all(n == 1 for _, n in plan.values())
+            T = 1 if pure_decode else self.chunk
             B = self.eng.slots
             toks = np.zeros((B, T), np.int32)
             lengths = np.zeros((B,), np.int32)
@@ -560,12 +644,23 @@ class ContinuousScheduler:
                 toks[slot, :n] = tk
                 lengths[slot] = self.active[slot].length
                 n_new[slot] = n
+            t0 = self.tel.clock()
             logits = self.eng.step_chunk(toks, lengths, n_new)
-            self._commit(plan, logits)
+            dt = self.tel.clock() - t0
+            if pure_decode:
+                self.decode_wall_s += dt
+                self.decode_step_tokens += len(plan)
+            else:
+                self.prefill_wall_s += dt
+            with self.tel.span("host"):
+                self._commit(plan, logits)
             self.occupied_slot_steps += len(plan)
-        self.pool.observe_step()
-        self.steps += 1
-        self._break_stall()
+        with self.tel.span("host"):
+            self.pool.observe_step()
+            self.pool.publish_telemetry(self.tel)
+            self.steps += 1
+            self.tel.counter("serve_steps_total").inc()
+            self._break_stall()
         if invariant_checks_enabled():
             self.pool.assert_invariants()
 

@@ -16,7 +16,10 @@ to resume mid-stream after a hard kill:
     time is saved, so a restart does not reset the budget);
   * engine host state: the step counter (the PRNG-stream fold positions
     for the bucketed splice path) and the prefix-registration cursors;
-  * the sampler's numpy Generator state (temperature > 0 runs).
+  * the sampler's numpy Generator state (temperature > 0 runs);
+  * the telemetry registry's counters and histograms
+    (:meth:`Telemetry.state_dict`), so a crash-recovered run's metrics
+    report cumulative truth rather than restarting from zero.
 
 Because KV page codes are a *pure function of page content* — the
 position-addressed stochastic-rounding streams fold each write's position,
@@ -66,6 +69,15 @@ def _req_record(req: Request, now: float) -> dict:
         # wall-clock deadlines survive the restart: save elapsed, restore
         # re-anchors t_added so the budget keeps draining
         "elapsed_s": (now - req.t_added) if req.t_added >= 0 else 0.0,
+        # lifecycle trace: step fields carry verbatim; token-time anchors
+        # re-anchor like t_added so inter-token gaps stay monotonic-valid
+        "admitted_step": req.admitted_step,
+        "first_token_step": req.first_token_step,
+        "first_token_elapsed_s": ((now - req.t_first_token)
+                                  if req.t_first_token >= 0 else -1.0),
+        "last_token_elapsed_s": ((now - req.t_last_token)
+                                 if req.t_last_token >= 0 else -1.0),
+        "prefix_cached_tokens": req.prefix_cached_tokens,
     }
     if req.spill is not None:
         rec["spill_meta"] = {
@@ -95,6 +107,13 @@ def _rebuild_request(rec: dict, now: float) -> Request:
         finish_reason=rec["finish_reason"],
     )
     req.t_added = now - rec.get("elapsed_s", 0.0)
+    req.admitted_step = rec.get("admitted_step", -1)
+    req.first_token_step = rec.get("first_token_step", -1)
+    fte = rec.get("first_token_elapsed_s", -1.0)
+    req.t_first_token = (now - fte) if fte >= 0 else -1.0
+    lte = rec.get("last_token_elapsed_s", -1.0)
+    req.t_last_token = (now - lte) if lte >= 0 else -1.0
+    req.prefix_cached_tokens = rec.get("prefix_cached_tokens", 0)
     return req
 
 
@@ -168,6 +187,9 @@ def save_snapshot(ckpt_dir, eng, sched: ContinuousScheduler,
         },
         "sampler_rng": (None if sampler_rng is None
                         else sampler_rng.bit_generator.state),
+        # counters + histograms only (state_dict drops gauges/events): a
+        # crash-recovered run reports cumulative truth, not post-restart
+        "telemetry": sched.tel.state_dict(),
     }
     store.save(ckpt_dir, arrays, step=sched.steps, data_state=data_state,
                keep_last=keep_last, async_=False)
@@ -263,4 +285,6 @@ def load_snapshot(ckpt_dir, eng, sched: ContinuousScheduler,
 
     if sampler_rng is not None and data.get("sampler_rng") is not None:
         sampler_rng.bit_generator.state = data["sampler_rng"]
+    if data.get("telemetry") is not None:  # absent in pre-telemetry snapshots
+        sched.tel.load_state_dict(data["telemetry"])
     return manifest["step"]

@@ -40,6 +40,29 @@ def test_check_mode_detects_staleness(tmp_path):
     assert gd.main(["--check", "--out", str(out)]) == 1
 
 
+def test_observability_metric_catalog_is_fresh():
+    gd = _gen_docs()
+    doc = ROOT / "docs" / "observability.md"
+    assert doc.exists(), "run `python scripts/gen_docs.py`"
+    cur = doc.read_text()
+    assert gd.splice_metrics(cur) == cur, (
+        "docs/observability.md metric table is stale; run "
+        "`python scripts/gen_docs.py`"
+    )
+
+
+def test_metric_catalog_covers_every_spec():
+    import sys
+
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.serving.telemetry import METRIC_CATALOG
+
+    gd = _gen_docs()
+    table = gd.render_metric_table()
+    for spec in METRIC_CATALOG:
+        assert f"`{spec.name}`" in table, spec.name
+
+
 def test_every_cell_rendered():
     """Every (format x op) section and every FACTORED_MUL entry appears."""
     gd = _gen_docs()
