@@ -43,6 +43,12 @@ Framework:
                           the serving step (admit/prefill/decode/kv_write/
                           host), paged vs dense and prefix on vs off
                           -> BENCH_6.json.
+  serve_paged_gap         warm paged vs dense serving throughput, fused
+                          on/off + prefix on/off bit-identity flags, and
+                          deterministic host-transfer counts; ``--gate``
+                          (or ``--gate=counts`` in CI) fails on
+                          regression vs the checked-in baseline
+                          -> BENCH_7.json.
   roofline_summary        key roofline numbers from the dry-run artifacts.
 """
 import json
@@ -588,6 +594,148 @@ def serve_phases():
              f"slots=3 gen={gen} cpu", "tok/s")
 
 
+def serve_paged_gap():
+    """The ISSUE-8 paged-decode-gap acceptance bench -> BENCH_7.json.
+
+    Measures the paged serving stack against the dense baseline on the
+    shared-system-prompt smoke workload, with WARM engines: every cell
+    runs once to compile its traces and is then re-run for the reported
+    number.  (BENCH_2's 22.6 vs 95.0 tok/s gap was dominated by XLA
+    compile time amortized over a 30-step run; the steady-state gap after
+    the fused-write/batched-host/async-step work is what this bench
+    tracks, and what the --gate keeps from reopening.)
+
+    Cells: dense/bucketed, paged/continuous with the fused write+attend
+    launch on and off, and paged with the prefix cache on.  Alongside the
+    wall-clock cells it emits the *deterministic* interpret-proxy counts
+    (scheduler steps, block-table host->device uploads — at most one per
+    step by construction) and the bit-identity flags, all under
+    stochastic FP8 KV rounding.  ``--gate`` revalidates the flags and
+    count invariants and fails if the paged/dense ratio or the
+    prefix-cache speedup regresses beyond tolerance vs the checked-in
+    BENCH_7.json.  The acceptance run: ``python benchmarks/run.py
+    serve_paged_gap --json=BENCH_7.json``.
+    """
+    from repro.configs import get_config
+    from repro.launch import serve
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, size=24)  # the common system prompt
+    suffixes = [4, 6, 5, 7, 4, 6, 5, 4]
+    gen = 8
+    queue = [np.concatenate([shared, rng.integers(0, 256, size=s)])
+             for s in suffixes]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(3.0, size=len(queue)))
+    ).astype(int)
+    cfg = get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
+    cells = [
+        ("dense", dict(cache_impl="dense"), dict(scheduler="bucketed")),
+        ("paged", dict(cache_impl="paged", page_size=8),
+         dict(scheduler="continuous", chunk=8)),
+        ("paged_unfused",
+         dict(cache_impl="paged", page_size=8, fused_decode=False),
+         dict(scheduler="continuous", chunk=8)),
+        ("paged_prefix",
+         dict(cache_impl="paged", page_size=8, prefix_cache=True),
+         dict(scheduler="continuous", chunk=8)),
+    ]
+    outs, results, counts = {}, {}, {}
+    for name, ekw, rkw in cells:
+        eng = serve.Engine(cfg, slots=3, max_seq=48, stochastic_kv=True,
+                           **ekw)
+        serve.run(eng, [q.copy() for q in queue], gen=gen, quiet=True,
+                  arrivals=arrivals, **rkw)  # warm: compile the traces
+        outs[name], stats = serve.run(eng, [q.copy() for q in queue],
+                                      gen=gen, quiet=True,
+                                      arrivals=arrivals, **rkw)
+        results[name] = stats
+        counts[name] = (
+            stats["steps"],
+            int(eng.tel.counter_value("host_transfers_total")),
+        )
+        tag = f"serve_paged_gap/qwen2-0.5b-smoke/{name}"
+        emit(f"{tag}/tok_s", f"{stats['tok_s']:.2f}",
+             f"warm steady-state; steps={stats['steps']} slots=3 "
+             f"gen={gen} stochastic KV cpu", "tok/s")
+    ratio = results["paged"]["tok_s"] / results["dense"]["tok_s"]
+    emit("serve_paged_gap/paged_over_dense", f"{ratio:.3f}",
+         "warm paged/dense tok_s; BENCH_2's cold-compile runs put this at "
+         "0.24 — the residual is the paged attend's bit-exactness "
+         "barriers blocking XLA CPU fusion, tracked so it cannot reopen",
+         "x")
+    prefix_speedup = (results["paged_prefix"]["tok_s"]
+                      / results["paged"]["tok_s"])
+    emit("serve_paged_gap/prefix_speedup", f"{prefix_speedup:.3f}",
+         f"prefix cache ON over OFF, same paged engine (BENCH_4 recorded "
+         f"this as a 0.86x LOSS; prefill tokens "
+         f"{results['paged_prefix']['prefill_tokens']} vs "
+         f"{results['paged']['prefill_tokens']})", "x")
+    # deterministic interpret-proxy counts: both runs of the paged cell
+    # (the gate re-checks these without any wall-clock tolerance)
+    steps, transfers = counts["paged"]
+    emit("serve_paged_gap/counts/steps", steps,
+         "scheduler steps of the warm paged cell (deterministic)")
+    emit("serve_paged_gap/counts/host_transfers", transfers,
+         "block-table uploads over BOTH paged-cell runs; at most one per "
+         "step (batched per-step host bookkeeping)")
+    # bit-identity flags, stochastic KV rounding ON
+    emit("serve_paged_gap/fused_outputs_equal",
+         int(outs["paged"] == outs["paged_unfused"]),
+         "fused write+attend on vs off: identical token streams "
+         "(stochastic KV; position-addressed write keys)")
+    emit("serve_paged_gap/prefix_outputs_equal",
+         int(outs["paged"] == outs["paged_prefix"]),
+         "prefix cache on vs off: identical token streams (stochastic KV)")
+    emit("serve_paged_gap/impl_outputs_equal",
+         int(outs["dense"] == outs["paged"]),
+         "dense vs paged engines: identical token streams (stochastic KV)")
+    if GATE:
+        _gate_paged_gap(ratio, prefix_speedup, steps, transfers, outs)
+
+
+def _gate_paged_gap(ratio, prefix_speedup, steps, transfers, outs):
+    """Fail (SystemExit) if the paged-decode gap regressed vs the
+    checked-in BENCH_7.json baseline.
+
+    Deterministic checks (exact, CI-safe): bit-identity flags and the
+    one-upload-per-step transfer bound.  Wall-clock checks (local
+    acceptance): paged/dense ratio within RATIO_TOL of baseline, prefix
+    speedup >= 1.
+    """
+    errors = []
+    if not outs["paged"] == outs["paged_unfused"]:
+        errors.append("fused on/off token streams diverged")
+    if not outs["paged"] == outs["paged_prefix"]:
+        errors.append("prefix on/off token streams diverged")
+    if not outs["dense"] == outs["paged"]:
+        errors.append("dense vs paged token streams diverged")
+    if transfers > 2 * steps:  # two runs of the cell share the counter
+        errors.append(
+            f"host_transfers={transfers} exceeds one per step "
+            f"(2 runs x {steps} steps)")
+    base_path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_7.json"
+    if GATE != "counts":
+        RATIO_TOL = 0.70  # CPU wall-clock noise floor
+        if not base_path.exists():
+            errors.append(f"no baseline at {base_path} for --gate")
+        else:
+            base = json.loads(base_path.read_text())
+            b_ratio = float(base["serve_paged_gap/paged_over_dense"]["value"])
+            if ratio < b_ratio * RATIO_TOL:
+                errors.append(
+                    f"paged/dense ratio {ratio:.3f} regressed beyond "
+                    f"{RATIO_TOL:.0%} of baseline {b_ratio:.3f}")
+            if prefix_speedup < 1.0:
+                errors.append(
+                    f"prefix cache costs throughput again "
+                    f"(speedup {prefix_speedup:.3f} < 1)")
+    if errors:
+        raise SystemExit("serve_paged_gap gate FAILED:\n  - "
+                         + "\n  - ".join(errors))
+    print(f"# serve_paged_gap gate OK ({'counts only' if GATE == 'counts' else 'full'})")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -615,8 +763,11 @@ BENCHES = {
     "serve_prefix": serve_prefix,
     "serve_chaos": serve_chaos,
     "serve_phases": serve_phases,
+    "serve_paged_gap": serve_paged_gap,
     "roofline_summary": roofline_summary,
 }
+
+GATE = None  # set by --gate / --gate=counts in main()
 
 
 def write_json(path: pathlib.Path) -> None:
@@ -630,11 +781,16 @@ def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     json_path = None
     names = []
+    global GATE
     for a in argv:
         if a == "--json":
             json_path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_1.json"
         elif a.startswith("--json="):
             json_path = pathlib.Path(a.split("=", 1)[1])
+        elif a == "--gate":
+            GATE = "full"
+        elif a == "--gate=counts":
+            GATE = "counts"
         elif a in BENCHES:
             names.append(a)
         else:

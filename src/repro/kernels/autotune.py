@@ -381,3 +381,79 @@ def flash_blocks(
 
     return tuple(_measure_best(key, candidates, make_fn, default,
                                kernel="flash", site=tail))
+
+
+# --------------------------------------------------------------------------- #
+# Paged decode attention (and the mixed prefill+decode step, which runs the
+# same per-sub-step paged attention — ``site`` keys the two separately)
+# --------------------------------------------------------------------------- #
+def paged_blocks(
+    B: int, maxp: int, page: int, KV: int, G: int, hd: int, *,
+    fmt: str, interpret: bool = False, site: str = "",
+) -> Tuple[int, int]:
+    """(pages_per_block, slots_per_block) for the paged-attention grid.
+
+    Each kernel program computes ``slots_per_block x pages_per_block``
+    per-page softmax partials; larger blocks amortize grid overhead on
+    accelerators at the cost of VMEM for the extra gathered pages.  The
+    heuristic — and the only interpret-mode choice — is (1, 1), today's
+    one-partial-per-program grid.  Cache entries are keyed by backend +
+    device kind + shape + ``site`` ("decode" vs "mixed" call sites tune
+    independently).
+    """
+    backend = jax.default_backend()
+    tail = (f"i{int(interpret)}|{B}x{maxp}x{page}|kv{KV}g{G}hd{hd}|{fmt}"
+            + (f"|{site}" if site else ""))
+    key = f"paged|{backend}|{_device_kind()}|{tail}"
+    cached = _lookup(key, None, interpret)
+    if cached is not None:
+        _publish("paged", tail, tuple(cached), None, "cached")
+        return tuple(cached)
+    default = (1, 1)
+    if not _should_measure(interpret):
+        _publish("paged", tail, default, None, "heuristic")
+        return default
+
+    from ..core.formats import FORMATS
+    from ..core.quant import encode
+
+    rng = np.random.default_rng(0)
+    P = max(B * maxp + 1, 2)
+    q = jax.numpy.asarray(
+        rng.standard_normal((B, 1, KV * G, hd)).astype(np.float32))
+    kf = jax.numpy.asarray(
+        rng.standard_normal((P, page, KV, hd)).astype(np.float32))
+    vf = jax.numpy.asarray(
+        rng.standard_normal((P, page, KV, hd)).astype(np.float32))
+    if fmt in FORMATS:
+        kp, vp = encode(kf, fmt), encode(vf, fmt)
+        eff_fmt = fmt
+    else:
+        kp, vp, eff_fmt = kf, vf, None
+    ks = jax.numpy.ones((P,), jax.numpy.float32)
+    vs = jax.numpy.ones((P,), jax.numpy.float32)
+    bt = jax.numpy.asarray(
+        rng.integers(1, P, size=(B, maxp)).astype(np.int32))
+    lengths = jax.numpy.asarray(
+        rng.integers(1, maxp * page + 1, size=(B,)).astype(np.int32))
+    candidates = [(p, s) for p in (1, 2, 4) for s in (1, 2, 4)
+                  if p <= maxp and s <= B]
+
+    def make_fn(cand):
+        ppb, spb = cand
+
+        def run():
+            from .paged_attention import _paged_kernel_call, quantize_q
+            if eff_fmt is not None:
+                codes, qs = quantize_q(q.reshape(B, KV * G, hd), eff_fmt)
+            else:
+                codes = q.reshape(B, KV * G, hd).astype(jax.numpy.float32)
+                qs = jax.numpy.ones((B,), jax.numpy.float32)
+            return _paged_kernel_call(
+                codes, qs, kp, vp, ks, vs, bt, lengths, fmt=eff_fmt,
+                mode="rne", page_size=page, KV=KV, G=G, window=0, cap=0.0,
+                interpret=interpret, ppb=ppb, spb=spb)
+        return run
+
+    return tuple(_measure_best(key, candidates, make_fn, default,
+                               kernel="paged", site=tail))

@@ -21,11 +21,20 @@ per-slot lengths ride in as scalar-prefetch operands so the k/v BlockSpec
 index maps can gather pages (``bt[b, j]``); pages a slot does not own are
 masked out entirely and contribute weight exp(-inf) = 0 in the combine.
 
-Numerics contract: ``impl="kernel"`` (interpret on CPU) is bit-identical to
-``impl="ref"`` — both run the same per-page function and the same combine,
-and every order-sensitive f32 reduction is pinned behind
+Numerics contract: ``impl="kernel"`` (interpret on CPU) and ``impl="batch"``
+(natively vectorized phase 1, the CPU serving path) are bit-identical to
+``impl="ref"`` — all three run the same per-element LNS ops and the same
+combine, and every order-sensitive f32 reduction is pinned behind
 ``jax.lax.optimization_barrier`` so XLA cannot re-vectorize or FMA-contract
-one side differently (``tests/test_paged_serving.py`` pins this).
+one side differently (``tests/test_paged_serving.py`` and
+``tests/test_paged_fuzz.py`` pin this).
+
+``fused_decode_write_attend`` is the decode hot path's single entry: it
+computes the new token's page codes once, scatters them into the cache
+arrays for the *next* step, and attends **without reading the scattered
+arrays** — the freshly encoded row is inserted into the gathered page block
+in-flight (in-kernel for ``impl="kernel"``), so the attention never
+serializes behind the O(P·page·KV·hd) cache update.
 """
 from __future__ import annotations
 
@@ -133,7 +142,13 @@ def _page_partial(
 
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
-    l = jax.lax.optimization_barrier(p.sum(axis=-1))
+    # Page-row sum as a dot against ones (same reason as the hd sum above):
+    # a reduce-sum here lowers context-dependently and would break the
+    # fused == unfused bit-identity contract.
+    l = jax.lax.optimization_barrier(jax.lax.dot_general(
+        p, jnp.ones((page,), jnp.float32), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ))
     # [KV, G, page] x [page, KV, dv] -> [KV, G, dv], batched over KV
     o = jax.lax.optimization_barrier(jax.lax.dot_general(
         p, vf, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
@@ -148,13 +163,27 @@ def _combine_partials(m, l, o):
     """m, l: [B, maxp, KV, G]; o: [B, maxp, KV, G, dv] -> [B, KV*G, dv].
 
     The entry barrier isolates the combine from its (impl-specific)
-    producers so XLA fuses/compiles it identically for kernel and ref.
+    producers so XLA fuses/compiles it identically for every impl.  The
+    page-axis sums run as dots against ones for the same reason as
+    ``_page_scores_lns``: XLA CPU lowers dots consistently across graph
+    contexts, while reduce-sum vectorization depends on what else lives in
+    the program (the fused write+attend graph would otherwise combine a
+    ulp apart from the standalone attention).
     """
-    m, l, o = jax.lax.optimization_barrier((m, l, o))
-    M = m.max(axis=1)                                    # [B, KV, G]
-    w = jnp.exp(m - M[:, None])                          # [B, maxp, KV, G]
-    l_tot = jax.lax.optimization_barrier((w * l).sum(axis=1))
-    o_tot = jax.lax.optimization_barrier((w[..., None] * o).sum(axis=1))
+    pin = jax.lax.optimization_barrier
+    m, l, o = pin((m, l, o))
+    maxp = m.shape[1]
+    ones = jnp.ones((maxp,), jnp.float32)
+    M = pin(m.max(axis=1))                               # [B, KV, G]
+    w = pin(jnp.exp(pin(m - M[:, None])))                # [B, maxp, KV, G]
+    l_tot = pin(jax.lax.dot_general(
+        pin(w * l), ones, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ))
+    o_tot = pin(jax.lax.dot_general(
+        pin(w[..., None] * o), ones, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ))
     out = o_tot / jnp.maximum(l_tot, 1e-37)[..., None]
     B, KV, G, dv = out.shape
     return out.reshape(B, KV * G, dv)
@@ -195,84 +224,306 @@ def paged_attention_ref(
 
 
 # --------------------------------------------------------------------------- #
+# Natively-batched phase 1 (impl="batch"): gather every slot's pages up
+# front and run the LNS machinery on the full [B, maxp, ...] arrays.  No
+# vmap (``optimization_barrier`` has no batching rule) — the broadcasts are
+# written out by hand, element-for-element the same ops as ``_page_partial``
+# so the result is bit-identical to the sequential reference.  This replaces
+# two nested ``lax.map`` while-loops per layer on the CPU serving path.
+# --------------------------------------------------------------------------- #
+def _insert_rows(gathered, row, logical, rows, mask):
+    """Insert one freshly-written row per slot into the gathered page block.
+
+    gathered: [B, maxp, page, KV, hd]; row: [B, KV, hd]; logical/rows: [B]
+    int32 (logical page index and in-page row of each slot's write); mask:
+    [B] bool or None.  Equals scatter-into-pages-then-gather for every lane
+    whose target page is exclusively owned (the write contract).
+    """
+    B, maxp, page = gathered.shape[:3]
+    sel = (jnp.arange(maxp, dtype=jnp.int32)[None, :, None] ==
+           logical[:, None, None])
+    sel &= (jnp.arange(page, dtype=jnp.int32)[None, None, :] ==
+            rows[:, None, None])
+    if mask is not None:
+        sel &= mask[:, None, None]
+    return jnp.where(sel[..., None, None], row[:, None, None], gathered)
+
+
+def _batch_partials(
+    q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
+    fmt, mode, KV, G, window, cap, inserts=None,
+):
+    """All (slot, page) softmax partials at once: (m, l, o) shaped
+    [B, maxp, KV, G(, dv)] — the same combine input the ref builds."""
+    B, maxp = block_tables.shape
+    kg = k_pages[block_tables]            # [B, maxp, page, KV, hd]
+    vg = v_pages[block_tables]            # [B, maxp, page, KV, dv]
+    ksg = k_scale[block_tables]           # [B, maxp]
+    vsg = v_scale[block_tables]
+    page = kg.shape[2]
+    if inserts is not None:
+        k_row, v_row, logical, rows, imask = inserts
+        kg = _insert_rows(kg, k_row, logical, rows, imask)
+        vg = _insert_rows(vg, v_row, logical, rows, imask)
+    if fmt is not None:
+        fmt_obj = FORMATS[fmt] if isinstance(fmt, str) else fmt
+        codes, qs = q_op
+        hd = codes.shape[-1]
+        qc = codes.reshape(B, KV, G, hd)
+        px = lns_prepare(qc, fmt_obj, mode, side="x")   # fields [B,KV,G,hd]
+        py = lns_prepare(kg, fmt_obj, mode, side="y")   # [B,maxp,page,KV,hd]
+
+        def ex(f):
+            return None if f is None else f[:, None, :, :, None, :]
+
+        def ey(f):
+            if f is None:
+                return None
+            return jnp.transpose(f, (0, 1, 3, 2, 4))[:, :, :, None, :, :]
+
+        prod = lns_combine(type(px)(*(ex(f) for f in px)),
+                           type(py)(*(ey(f) for f in py)), fmt_obj)
+        # [B, maxp, KV, G, page, hd] -> sum over hd, pinned like the ref
+        ssum = jax.lax.dot_general(
+            prod, jnp.ones((prod.shape[-1],), jnp.float32),
+            (((5,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        qk = qs[:, None] * ksg * hd**-0.5               # [B, maxp]
+        s = jax.lax.optimization_barrier(ssum) * qk[:, :, None, None, None]
+        vf = code_to_f32(vg, fmt_obj) * vsg[:, :, None, None, None]
+    else:
+        hd = q_op.shape[-1]
+        qb = jnp.broadcast_to(
+            q_op.astype(jnp.float32).reshape(B, 1, KV, G, hd),
+            (B, maxp, KV, G, hd),
+        )
+        kt = jnp.transpose(kg.astype(jnp.float32), (0, 1, 3, 2, 4))
+        s = jax.lax.dot_general(
+            qb, kt, (((4,), (4,)), ((0, 1, 2), (0, 1, 2))),
+            preferred_element_type=jnp.float32,
+        ) * hd**-0.5
+        vf = vg.astype(jnp.float32)
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+
+    t = (jnp.arange(maxp, dtype=jnp.int32) * page)[None, :, None, None, None]
+    t = t + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 1, page), 4)
+    ln = lengths[:, None, None, None, None]
+    ok = t < ln
+    if window:
+        ok &= (ln - 1 - t) < window
+    pin = jax.lax.optimization_barrier
+    s = pin(jnp.where(ok, s, NEG_INF))
+
+    m = pin(s.max(axis=-1))                              # [B, maxp, KV, G]
+    p = pin(jnp.exp(pin(s - m[..., None])))
+    # Page-row sum as a dot against ones: XLA CPU lowers dots consistently
+    # across graph contexts, while reduce-sum vectorization is context
+    # dependent (1-ulp drift when e.g. cache scatters share the graph).
+    l = pin(jax.lax.dot_general(
+        p, jnp.ones((page,), jnp.float32), (((4,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ))
+    vt = jnp.transpose(vf, (0, 1, 3, 2, 4))              # [B,maxp,KV,page,dv]
+    o = pin(jax.lax.dot_general(
+        p, vt, (((4,), (3,)), ((0, 1, 2), (0, 1, 2))),
+        preferred_element_type=jnp.float32,
+    ))
+    return m, l, o
+
+
+def paged_attention_batch(
+    q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
+    fmt: Optional[str], mode: str, page_size: int, KV: int, G: int,
+    window: int = 0, cap: float = 0.0, inserts=None,
+):
+    m, l, o = _batch_partials(
+        q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+        fmt=fmt, mode=mode, KV=KV, G=G, window=window, cap=cap,
+        inserts=inserts,
+    )
+    return _combine_partials(m, l, o)
+
+
+# --------------------------------------------------------------------------- #
 # Pallas kernel
 # --------------------------------------------------------------------------- #
 def _paged_kernel(
-    bt_ref, len_ref,                 # scalar prefetch
-    q_ref, qs_ref, kp_ref, ks_ref, vp_ref, vs_ref,  # blocks
-    m_ref, l_ref, o_ref,
-    *, fmt, mode, page, KV, G, window, cap,
+    *refs, fmt, mode, page, KV, G, window, cap, spb, ppb, fused,
 ):
+    """Grid (Bp/spb, Jp/ppb) program: spb slots x ppb pages of partials.
+
+    With ``fused`` the new token's row codes ride in as extra operands and
+    are spliced into the gathered page block in-register before the partial
+    — the kernel never reads the scattered cache arrays.
+    """
+    n = spb * ppb
+    if fused:
+        bt_ref, len_ref, log_ref, row_ref, msk_ref = refs[:5]
+        refs = refs[5:]
+        kins_ref, vins_ref = refs[:2]
+        refs = refs[2:]
+    else:
+        bt_ref, len_ref = refs[:2]
+        refs = refs[2:]
+    q_ref, qs_ref = refs[:2]
+    kp_refs = refs[2:2 + n]
+    ks_refs = refs[2 + n:2 + 2 * n]
+    vp_refs = refs[2 + 2 * n:2 + 3 * n]
+    vs_refs = refs[2 + 3 * n:2 + 4 * n]
+    m_ref, l_ref, o_ref = refs[2 + 4 * n:]
     b = pl.program_id(0)
     j = pl.program_id(1)
     hd = q_ref.shape[-1]
-    q = q_ref[0].reshape(KV, G, hd)
-    q_op = (q, qs_ref[0, 0]) if fmt is not None else q
-    m, l, o = _page_partial(
-        q_op, kp_ref[0], vp_ref[0], ks_ref[0, 0], vs_ref[0, 0],
-        j * page, len_ref[b], fmt=fmt, mode=mode, window=window, cap=cap,
-    )
-    m_ref[0, 0] = m
-    l_ref[0, 0] = l
-    o_ref[0, 0] = o
+    for i in range(spb):
+        bs = b * spb + i
+        q = q_ref[i].reshape(KV, G, hd)
+        q_op = (q, qs_ref[i, 0]) if fmt is not None else q
+        for jj in range(ppb):
+            idx = i * ppb + jj
+            kp_blk = kp_refs[idx][0]
+            vp_blk = vp_refs[idx][0]
+            if fused:
+                hit = (log_ref[bs] == j * ppb + jj) & (msk_ref[bs] != 0)
+                row = jax.lax.broadcasted_iota(
+                    jnp.int32, (page, 1, 1), 0) == row_ref[bs]
+                kp_blk = jnp.where(hit & row, kins_ref[i][None], kp_blk)
+                vp_blk = jnp.where(hit & row, vins_ref[i][None], vp_blk)
+            m, l, o = _page_partial(
+                q_op, kp_blk, vp_blk, ks_refs[idx][0, 0], vs_refs[idx][0, 0],
+                (j * ppb + jj) * page, len_ref[bs],
+                fmt=fmt, mode=mode, window=window, cap=cap,
+            )
+            m_ref[i, jj] = m
+            l_ref[i, jj] = l
+            o_ref[i, jj] = o
+
+
+def _pad_rows(x, n):
+    return x if n == 0 else jnp.pad(x, ((0, n),) + ((0, 0),) * (x.ndim - 1))
 
 
 def _paged_kernel_call(
     q_in, q_scale, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
     *, fmt, mode, page_size, KV, G, window, cap, interpret,
+    ppb: int = 1, spb: int = 1, inserts=None,
 ):
+    """Launch the paged kernel on a (slots/spb, pages/ppb) grid.
+
+    ``ppb`` pages x ``spb`` slots per program (the autotuned block shape):
+    each gathered page is its own operand so the BlockSpec index maps stay
+    single-page gathers.  Slot/page axes are padded up to the block shape —
+    padded lanes carry length 0 / the null page, are fully masked by the
+    shared partial (m = -inf), and are sliced off before the combine so the
+    result is bit-identical for every (ppb, spb).
+    """
     B, H, hd = q_in.shape
     _, page, _, dv = v_pages.shape
     maxp = block_tables.shape[1]
+    Bp = -(-B // spb) * spb
+    Jp = -(-maxp // ppb) * ppb
+    pad_b, pad_j = Bp - B, Jp - maxp
+    bt = jnp.pad(block_tables, ((0, pad_b), (0, pad_j)))
+    ln = _pad_rows(lengths, pad_b)
+    q_in = _pad_rows(q_in, pad_b)
+    q_scale = _pad_rows(q_scale, pad_b)
+    fused = inserts is not None
     kernel = functools.partial(
         _paged_kernel, fmt=fmt, mode=mode, page=page_size, KV=KV, G=G,
-        window=window, cap=cap,
+        window=window, cap=cap, spb=spb, ppb=ppb, fused=fused,
     )
+    n_prefetch = 5 if fused else 2
+
+    def page_spec(shape, i, jj):
+        def ix(b, j, *pref):
+            bt_p = pref[0]
+            return (bt_p[b * spb + i, j * ppb + jj],) + (0,) * (len(shape) - 1)
+        return pl.BlockSpec(shape, ix)
+
+    in_specs = [
+        pl.BlockSpec((spb, H, hd), lambda b, j, *pref: (b, 0, 0)),
+        pl.BlockSpec((spb, 1), lambda b, j, *pref: (b, 0)),
+    ]
+    in_specs += [page_spec((1, page_size, KV, hd), i, jj)
+                 for i in range(spb) for jj in range(ppb)]
+    in_specs += [page_spec((1, 1), i, jj)
+                 for i in range(spb) for jj in range(ppb)]
+    in_specs += [page_spec((1, page_size, KV, dv), i, jj)
+                 for i in range(spb) for jj in range(ppb)]
+    in_specs += [page_spec((1, 1), i, jj)
+                 for i in range(spb) for jj in range(ppb)]
+    operands = [q_in, q_scale[:, None]]
+    operands += [k_pages] * (spb * ppb) + [k_scale[:, None]] * (spb * ppb)
+    operands += [v_pages] * (spb * ppb) + [v_scale[:, None]] * (spb * ppb)
+    prefetch = [bt, ln]
+    if fused:
+        k_row, v_row, logical, rows, imask = inserts
+        imask = (jnp.ones((B,), jnp.int32) if imask is None
+                 else imask.astype(jnp.int32))
+        prefetch += [_pad_rows(logical, pad_b), _pad_rows(rows, pad_b),
+                     _pad_rows(imask, pad_b)]
+        in_specs = [
+            pl.BlockSpec((spb,) + k_row.shape[1:],
+                         lambda b, j, *pref: (b,) + (0,) * (k_row.ndim - 1)),
+            pl.BlockSpec((spb,) + v_row.shape[1:],
+                         lambda b, j, *pref: (b,) + (0,) * (v_row.ndim - 1)),
+        ] + in_specs
+        operands = [_pad_rows(k_row, pad_b), _pad_rows(v_row, pad_b)] + operands
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, maxp),
-        in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (b, 0)),
-            pl.BlockSpec((1, page_size, KV, hd),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (bt[b, j], 0)),
-            pl.BlockSpec((1, page_size, KV, dv),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j, bt, ln: (bt[b, j], 0)),
-        ],
+        num_scalar_prefetch=n_prefetch,
+        grid=(Bp // spb, Jp // ppb),
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, KV, G), lambda b, j, bt, ln: (b, j, 0, 0)),
-            pl.BlockSpec((1, 1, KV, G), lambda b, j, bt, ln: (b, j, 0, 0)),
-            pl.BlockSpec((1, 1, KV, G, dv),
-                         lambda b, j, bt, ln: (b, j, 0, 0, 0)),
+            pl.BlockSpec((spb, ppb, KV, G), lambda b, j, *pref: (b, j, 0, 0)),
+            pl.BlockSpec((spb, ppb, KV, G), lambda b, j, *pref: (b, j, 0, 0)),
+            pl.BlockSpec((spb, ppb, KV, G, dv),
+                         lambda b, j, *pref: (b, j, 0, 0, 0)),
         ],
     )
     m, l, o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, maxp, KV, G), jnp.float32),
-            jax.ShapeDtypeStruct((B, maxp, KV, G), jnp.float32),
-            jax.ShapeDtypeStruct((B, maxp, KV, G, dv), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Jp, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Jp, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Jp, KV, G, dv), jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,
-    )(block_tables, lengths, q_in, q_scale[:, None], k_pages,
-      k_scale[:, None], v_pages, v_scale[:, None])
-    return _combine_partials(m, l, o)
+    )(*prefetch, *operands)
+    return _combine_partials(m[:B, :maxp], l[:B, :maxp], o[:B, :maxp])
 
 
 # --------------------------------------------------------------------------- #
 # Public entry point
 # --------------------------------------------------------------------------- #
+def _resolve_impl(impl: str, interpret):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if impl == "auto":
+        impl = "batch" if jax.default_backend() == "cpu" else "kernel"
+    return impl, interpret
+
+
+def _kernel_blocks(impl, block_tables, page_size, KV, G, hd, fmt, interpret,
+                   site=""):
+    """Autotuned (pages_per_block, slots_per_block) for the kernel grid."""
+    if impl != "kernel":
+        return 1, 1
+    from .autotune import paged_blocks
+
+    B, maxp = block_tables.shape
+    return paged_blocks(B, maxp, page_size, KV, G, hd,
+                        fmt=fmt or "f32", interpret=interpret, site=site)
+
+
 def paged_decode_attention(
     q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
     fmt: Optional[str], n_kv_heads: int, mode: str = "rne",
     window: int = 0, cap: float = 0.0,
-    impl: str = "auto", interpret: Optional[bool] = None,
+    impl: str = "auto", interpret: Optional[bool] = None, site: str = "",
 ):
     """Decode attention against a paged KV cache.
 
@@ -282,29 +533,33 @@ def paged_decode_attention(
     [B, maxp] int32 page ids (unowned entries must point at a reserved page
     — they are masked by ``lengths``); lengths: [B] int32 valid tokens.
 
-    ``impl``: "kernel" (Pallas), "ref" (pure JAX), "auto" = ref on CPU,
-    kernel on accelerators.  Returns [B, 1, H, dv] in q.dtype.
+    ``impl``: "kernel" (Pallas), "ref" (sequential pure JAX oracle),
+    "batch" (vectorized pure JAX — the CPU serving path), "auto" = batch on
+    CPU, kernel on accelerators.  All three are bit-identical.  ``site``
+    keys the autotune cache entry for the kernel block shape.
+    Returns [B, 1, H, dv] in q.dtype.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    if impl == "auto":
-        impl = "ref" if jax.default_backend() == "cpu" else "kernel"
+    impl, interpret = _resolve_impl(impl, interpret)
+    ppb, spb = _kernel_blocks(impl, block_tables, k_pages.shape[1],
+                              n_kv_heads, q.shape[2] // n_kv_heads,
+                              q.shape[3], fmt, interpret, site=site)
     return _paged_decode_attention(
         q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
         fmt=fmt, n_kv_heads=n_kv_heads, mode=mode, window=window, cap=cap,
-        impl=impl, interpret=interpret,
+        impl=impl, interpret=interpret, ppb=ppb, spb=spb,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("fmt", "n_kv_heads", "mode", "window", "cap", "impl",
-                     "interpret"),
+                     "interpret", "ppb", "spb"),
 )
 def _paged_decode_attention(
     q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
     fmt: Optional[str], n_kv_heads: int, mode: str,
     window: int, cap: float, impl: str, interpret: bool,
+    ppb: int = 1, spb: int = 1,
 ):
     B, one, H, hd = q.shape
     assert one == 1, "paged decode attention is single-position"
@@ -325,6 +580,12 @@ def _paged_decode_attention(
             fmt=fmt, mode=mode, page_size=k_pages.shape[1], KV=KV, G=G,
             window=window, cap=cap,
         )
+    elif impl == "batch":
+        out = paged_attention_batch(
+            q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+            fmt=fmt, mode=mode, page_size=k_pages.shape[1], KV=KV, G=G,
+            window=window, cap=cap,
+        )
     elif impl == "kernel":
         if fmt is not None:
             q_arr, q_scale = q_op
@@ -334,8 +595,144 @@ def _paged_decode_attention(
             q_arr, q_scale, k_pages, v_pages, k_scale, v_scale,
             block_tables, lengths, fmt=fmt, mode=mode,
             page_size=k_pages.shape[1], KV=KV, G=G, window=window, cap=cap,
-            interpret=interpret,
+            interpret=interpret, ppb=ppb, spb=spb,
         )
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Fused KV-write + attend: the decode hot path's single launch.
+# --------------------------------------------------------------------------- #
+def fused_decode_write_attend(
+    q, k_new, v_new, k_pages, v_pages, k_scale, v_scale, block_tables,
+    lengths, *, fmt: Optional[str], n_kv_heads: int, mode: str = "rne",
+    kv_mode: str = "stochastic", k_key=None, v_key=None, write_mask=None,
+    window: int = 0, cap: float = 0.0,
+    impl: str = "auto", interpret: Optional[bool] = None, site: str = "",
+):
+    """Write one decode token's K/V into its page AND attend, in one launch.
+
+    q: [B, 1, H, hd]; k_new/v_new: [B, KV, hd] float (this token's
+    projected K/V); ``lengths`` are **pre-write** context lengths — the
+    write lands at position ``lengths`` and attention covers
+    ``lengths + 1`` tokens, exactly like the unfused
+    ``write_token_page`` -> ``paged_decode_attention`` composition.
+
+    The row codes and page scales are computed once (identical math to
+    ``write_token_page``, including the stochastic-rounding streams fed by
+    ``k_key``/``v_key`` and the explicit ``write_mask`` null-page
+    convention).  The cache scatter and the attention both consume them,
+    but the attention inserts the row into the *gathered* page block
+    in-flight instead of reading the scattered arrays — so the launch's
+    critical path never waits for the O(P) cache update.
+
+    Bit-identity contract: identical to the unfused composition on every
+    lane whose ``write_mask`` is set (masked lanes share the null page,
+    whose contents depend on host scatter order — both compositions mask
+    those outputs downstream).
+
+    Returns ``(out [B, 1, H, dv], new_k_pages, new_k_scale, new_v_pages,
+    new_v_scale)``.
+    """
+    impl, interpret = _resolve_impl(impl, interpret)
+    ppb, spb = _kernel_blocks(impl, block_tables, k_pages.shape[1],
+                              n_kv_heads, q.shape[2] // n_kv_heads,
+                              q.shape[3], fmt, interpret, site=site)
+    out, new_kp, new_ks, new_vp, new_vs, _aux = _fused_decode_write_attend(
+        q, k_new, v_new, k_pages, v_pages, k_scale, v_scale, block_tables,
+        lengths, k_key, v_key, write_mask,
+        fmt=fmt, n_kv_heads=n_kv_heads, mode=mode, kv_mode=kv_mode,
+        window=window, cap=cap, impl=impl, interpret=interpret,
+        ppb=ppb, spb=spb,
+    )
+    return out, new_kp, new_ks, new_vp, new_vs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "n_kv_heads", "mode", "kv_mode", "window", "cap",
+                     "impl", "interpret", "ppb", "spb"),
+)
+def _fused_decode_write_attend(
+    q, k_new, v_new, k_pages, v_pages, k_scale, v_scale, block_tables,
+    lengths, k_key, v_key, write_mask, *, fmt, n_kv_heads, mode, kv_mode,
+    window, cap, impl, interpret, ppb, spb,
+):
+    from ..serving.page_pool import token_row_codes
+
+    B, one, H, hd = q.shape
+    assert one == 1, "fused decode write+attend is single-position"
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    page_size = k_pages.shape[1]
+    KV = n_kv_heads
+    G = H // KV
+    logical = lengths // page_size
+    rows = lengths - logical * page_size
+    page_ids = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+
+    pids_k, k_row, ks_new = token_row_codes(
+        k_scale, k_new, page_ids, rows, fmt=fmt, mode=kv_mode, key=k_key,
+        write_mask=write_mask,
+    )
+    pids_v, v_row, vs_new = token_row_codes(
+        v_scale, v_new, page_ids, rows, fmt=fmt, mode=kv_mode, key=v_key,
+        write_mask=write_mask,
+    )
+    # cache carry for the next step — off the attention's critical path
+    new_kp = k_pages.at[pids_k, rows].set(k_row)
+    new_vp = v_pages.at[pids_v, rows].set(v_row)
+    if fmt is not None:
+        new_ks = k_scale.at[pids_k].set(ks_new)
+        new_vs = v_scale.at[pids_v].set(vs_new)
+    else:
+        new_ks, new_vs = k_scale, v_scale
+
+    q_in = q.reshape(B, H, hd)
+    if fmt is not None:
+        codes, qs = quantize_q(q_in, fmt)
+        q_op = (codes, qs)
+    else:
+        q_op = q_in.astype(jnp.float32)
+    attend_len = lengths + 1
+    mask = None if write_mask is None else jnp.asarray(write_mask, bool)
+
+    aux = ()
+    if impl == "ref":
+        # oracle: literal write-then-attend over the scattered arrays
+        out = paged_attention_ref(
+            q_op, new_kp, new_vp, new_ks, new_vs, block_tables, attend_len,
+            fmt=fmt, mode=mode, page_size=page_size, KV=KV, G=G,
+            window=window, cap=cap,
+        )
+    elif impl == "batch":
+        m, l, o = _batch_partials(
+            q_op, k_pages, v_pages, new_ks, new_vs, block_tables, attend_len,
+            fmt=fmt, mode=mode, KV=KV, G=G, window=window, cap=cap,
+            inserts=(k_row, v_row, logical, rows, mask),
+        )
+        out = _combine_partials(m, l, o)
+        # Materialize the softmax partials as (discarded) graph outputs.
+        # Barriers alone do not stop XLA CPU from duplicating their
+        # producers into downstream fusions with context-dependent
+        # vectorization; an output forces one canonical computation, which
+        # keeps the fused path bit-identical to write-then-attend.
+        aux = (m, l)
+    elif impl == "kernel":
+        if fmt is not None:
+            q_arr, q_scale = q_op
+        else:
+            q_arr, q_scale = q_op, jnp.ones((B,), jnp.float32)
+        out = _paged_kernel_call(
+            q_arr, q_scale, k_pages, v_pages, new_ks, new_vs,
+            block_tables, attend_len, fmt=fmt, mode=mode,
+            page_size=page_size, KV=KV, G=G, window=window, cap=cap,
+            interpret=interpret, ppb=ppb, spb=spb,
+            inserts=(k_row, v_row, logical, rows, mask),
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    out = out.reshape(B, 1, H, -1).astype(q.dtype)
+    return out, new_kp, new_ks, new_vp, new_vs, aux

@@ -88,8 +88,14 @@ class Engine:
                  num_pages: Optional[int] = None, rng_seed: int = 0,
                  stochastic_kv: Optional[bool] = None,
                  prefix_cache: bool = False,
+                 fused_decode: bool = True,
                  telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
+        # fused_decode=True runs decode steps as one fused KV-write+attend
+        # launch; False keeps the two-launch write-then-attend composition.
+        # Token streams are bit-identical either way (pinned by
+        # tests/test_paged_fuzz.py), so this is a perf knob, not semantics.
+        self.fused_decode = bool(fused_decode)
         # Phase spans (prefill/decode/kv_write/host) land here; the
         # scheduler shares the same registry (see ContinuousScheduler).
         self.tel = telemetry if telemetry is not None else Telemetry()
@@ -149,11 +155,18 @@ class Engine:
                 slots, num_pages, page_size, max_seq
             )
             self._decode_paged = jax.jit(
-                self.model.decode_step_paged, static_argnames=("page_size",)
+                self.model.decode_step_paged,
+                static_argnames=("page_size", "fused"),
             )
             self._mixed_step = jax.jit(
-                self.model.step_paged, static_argnames=("page_size",)
+                self.model.step_paged,
+                static_argnames=("page_size", "fused"),
             )
+            # device mirror of pool.block_tables, re-uploaded only when the
+            # pool's version moves (one transfer per mutating step instead
+            # of one per slot per step; pinned by tests)
+            self._bt_device = None
+            self._bt_version = -1
         else:
             raise ValueError(f"unknown cache_impl {cache_impl!r}")
 
@@ -300,7 +313,7 @@ class Engine:
                     toks[slot, :n] = prompt[done:done + n]
                     lengths[slot] = done
                     n_new[slot] = n
-                    self.pool.ensure_capacity(slot, done + n)
+                self.pool.ensure_capacity_batch(lengths + n_new)
             logits = self.step_chunk(toks, lengths, n_new)
             for slot in list(state):
                 prompt, done = state[slot]
@@ -347,19 +360,41 @@ class Engine:
     def _assert_writable(self, lengths: np.ndarray, n_new: np.ndarray) -> None:
         """Host-side guard behind the device-side write mask: every page an
         active slot will write this step must be exclusively owned — never
-        a shared/cached/pinned prefix page."""
-        for slot in range(self.slots):
-            n = int(n_new[slot])
-            if n <= 0:
-                continue
-            l0 = int(lengths[slot]) // self.page_size
-            l1 = (int(lengths[slot]) + n - 1) // self.page_size
-            owned = self.pool.pages_of[slot]
-            for lp in range(l0, l1 + 1):
-                assert self.pool.writable(owned[lp]), (
-                    f"slot {slot} would write into non-exclusive page "
-                    f"{owned[lp]} (logical {lp})"
-                )
+        a shared/cached/pinned prefix page.  One vectorized pass over the
+        block tables per step (an unallocated logical page reads the null
+        page 0, which is never writable, so missing capacity trips the
+        assert too)."""
+        lengths = np.asarray(lengths, np.int64)
+        n_new = np.asarray(n_new, np.int64)
+        act = n_new > 0
+        if not act.any():
+            return
+        l0 = lengths // self.page_size
+        l1 = (lengths + np.maximum(n_new, 1) - 1) // self.page_size
+        logical = np.arange(self.pool.max_pages_per_slot)[None, :]
+        written = act[:, None] & (logical >= l0[:, None]) & (logical <= l1[:, None])
+        pids = self.pool.block_tables[written]
+        bad = ~self.pool.writable_mask()[pids]
+        if bad.any():
+            slot_of = np.broadcast_to(
+                np.arange(self.slots)[:, None], written.shape)[written]
+            i = int(np.argmax(bad))
+            raise AssertionError(
+                f"slot {int(slot_of[i])} would write into non-exclusive "
+                f"page {int(pids[i])}"
+            )
+
+    def _device_block_tables(self):
+        """Device copy of the pool's block tables, re-uploaded only when
+        the pool's version counter moved since the last upload — one host
+        transfer per mutating step, zero for steady-state decode inside a
+        page (``host_transfers_total`` counts the uploads; pinned to one
+        per allocating step by tests/test_paged_serving.py)."""
+        if self._bt_version != self.pool.version or self._bt_device is None:
+            self._bt_device = jnp.asarray(self.pool.block_tables)
+            self._bt_version = self.pool.version
+            self.tel.counter("host_transfers_total").inc()
+        return self._bt_device
 
     # ------------------------------------------------------------------ #
     def _prefill_batch_inputs(self, prompts: List[np.ndarray]):
@@ -500,32 +535,47 @@ class Engine:
             self._step += 1
             return np.asarray(logits[:, : self.cfg.vocab])
 
-    def decode_paged(self, tokens: np.ndarray, lengths: np.ndarray):
+    def sync_logits(self, logits) -> np.ndarray:
+        """Block on an async-dispatched step's logits (the token-emission
+        boundary); no-op passthrough for an already-host array."""
+        if isinstance(logits, np.ndarray):
+            return logits
+        with self.tel.span("sync"):
+            return np.asarray(logits)
+
+    def decode_paged(self, tokens: np.ndarray, lengths: np.ndarray, *,
+                     sync: bool = True):
         """Paged decode step; allocates fresh pages for slots crossing a
         page boundary, then runs the paged decode.  Slots with ``lengths
         == 0`` are idle: their writes are masked into the null page (the
         explicit write-mask convention), so a slot whose block table still
-        maps shared prefix pages cannot corrupt them."""
+        maps shared prefix pages cannot corrupt them.
+
+        ``sync=False`` returns the device logits without blocking (JAX
+        async dispatch): the caller overlaps host bookkeeping with the
+        device step and calls :meth:`sync_logits` at the token-emission
+        boundary."""
         lengths = np.asarray(lengths)
         active = lengths > 0
         with self.tel.span("host"):
-            for slot in range(self.slots):
-                if active[slot]:
-                    self.pool.ensure_capacity(slot, int(lengths[slot]) + 1)
+            self.pool.ensure_capacity_batch(np.where(active, lengths + 1, 0))
             self._assert_writable(lengths, active.astype(np.int32))
+            tables = self._device_block_tables()
         with self.tel.span("decode"):
             logits, self.cache = self._decode_paged(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
-                jnp.asarray(lengths, jnp.int32),
-                jnp.asarray(self.pool.block_tables),
+                jnp.asarray(lengths, jnp.int32), tables,
                 page_size=self.page_size, key=self._token_key,
-                active=jnp.asarray(active),
+                active=jnp.asarray(active), fused=self.fused_decode,
             )
             self._step += 1
-            return np.asarray(logits[:, : self.cfg.vocab])
+            out = logits[:, : self.cfg.vocab]
+        if not sync:
+            return out
+        return self.sync_logits(out)
 
     def step_chunk(self, tokens: np.ndarray, lengths: np.ndarray,
-                   n_new: np.ndarray):
+                   n_new: np.ndarray, *, sync: bool = True):
         """Mixed prefill+decode step (continuous scheduler and the
         bucketed prefix-hit tail prefill).
 
@@ -536,10 +586,12 @@ class Engine:
         slot, and every page written must be exclusively owned — shared
         prefix pages are read-only (checked host-side here, masked
         device-side in the model).  Returns each slot's last-valid-token
-        logits [slots, vocab].
+        logits [slots, vocab] — the live device array when ``sync=False``
+        (resolve with :meth:`sync_logits` at the emission boundary).
         """
         with self.tel.span("host"):
             self._assert_writable(np.asarray(lengths), np.asarray(n_new))
+            tables = self._device_block_tables()
         # a step carrying any prefill chunk is charged to "prefill" (the
         # chunk dominates its T=chunk trace); pure decode steps to "decode"
         phase = "decode" if all(int(n) <= 1 for n in n_new) else "prefill"
@@ -547,12 +599,15 @@ class Engine:
             logits, self.cache = self._mixed_step(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(lengths, jnp.int32),
-                jnp.asarray(n_new, jnp.int32),
-                jnp.asarray(self.pool.block_tables),
+                jnp.asarray(n_new, jnp.int32), tables,
                 page_size=self.page_size, key=self._token_key,
+                fused=self.fused_decode,
             )
             self._step += 1
-            return np.asarray(logits[:, : self.cfg.vocab])
+            out = logits[:, : self.cfg.vocab]
+        if not sync:
+            return out
+        return self.sync_logits(out)
 
     # ------------------------------------------------------------------ #
     def _map_entries(self, fn):
@@ -909,10 +964,12 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
             pos[slot] = st["pos"]
         t_dec = clock()
         if eng.cache_impl == "paged":
-            logits = eng.decode_paged(toks, pos)
+            # async dispatch: per-step counters and pool telemetry run on
+            # the host while the device decodes; sync_logits blocks at the
+            # sampling (token-emission) boundary below
+            logits = eng.decode_paged(toks, pos, sync=False)
         else:
             logits = eng.decode(toks, pos)
-        decode_wall_s += clock() - t_dec
         steps += 1
         tel.counter("serve_steps_total").inc()
         decoded_tokens += len(active)
@@ -921,6 +978,8 @@ def run_bucketed(eng: Engine, queue: List[np.ndarray], *, gen: int,
         if eng.pool is not None:
             eng.pool.observe_step()
             eng.pool.publish_telemetry(tel)
+        logits = eng.sync_logits(logits)
+        decode_wall_s += clock() - t_dec
         nxt = sample(logits, temperature, rng)
         done = []
         for slot, st in list(active.items()):
@@ -1085,6 +1144,11 @@ def main(argv=None):
                     help="ref-counted prefix caching: requests sharing a "
                          "prompt prefix reuse its KV pages and prefill "
                          "only the uncached tail (paged pure-GQA caches)")
+    ap.add_argument("--fused-decode", default="on", choices=["on", "off"],
+                    help="fuse the token KV write into the paged decode "
+                         "attention (one launch per step); 'off' keeps "
+                         "the write-then-attend composition.  Token "
+                         "streams are bit-identical either way")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", default="8",
@@ -1166,6 +1230,7 @@ def main(argv=None):
         cache_impl=args.cache_impl, page_size=args.page_size,
         num_pages=args.pages or None, rng_seed=args.seed,
         prefix_cache=prefix_on,
+        fused_decode=args.fused_decode == "on",
         telemetry=Telemetry(profile=args.profile_spans),
     )
     rng = np.random.default_rng(args.seed)

@@ -172,9 +172,6 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
     positions = lengths[:, None]
     q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope, site=site)
 
-    logical = lengths // page_size
-    page_ids = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
-    rows = lengths - logical * page_size
     active = paged.get("active")
     key = paged.get("key")
     if key is None:
@@ -183,17 +180,31 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
         kk, vk = tuple(jax.random.split(key))
         fold_pos = jax.vmap(jax.random.fold_in, in_axes=(None, 0))
         kk, vk = fold_pos(kk, lengths), fold_pos(vk, lengths)
-    kp, ks = numerics.kv_write_token(pol, cache["kp"], cache["ks"],
-                                     k_new[:, 0], page_ids, rows, key=kk,
-                                     write_mask=active)
-    vp, vs = numerics.kv_write_token(pol, cache["vp"], cache["vs"],
-                                     v_new[:, 0], page_ids, rows, key=vk,
-                                     write_mask=active)
     window = 0 if is_global else cfg.window
-    out = numerics.attention(
-        q, kp, vp, ks, vs, block_tables, lengths + 1, pol,
-        n_kv_heads=KV, window=window, cap=cfg.attn_softcap, site=site,
-    )
+    if paged.get("fused", True):
+        # one launch: token KV write + attend (bit-identical to the
+        # unfused composition below on active lanes)
+        out, kp, ks, vp, vs = numerics.kv_fused_write_attend(
+            q, k_new[:, 0], v_new[:, 0], cache["kp"], cache["vp"],
+            cache["ks"], cache["vs"], block_tables, lengths, pol,
+            n_kv_heads=KV, k_key=kk, v_key=vk, write_mask=active,
+            window=window, cap=cfg.attn_softcap, site=site,
+        )
+    else:
+        logical = lengths // page_size
+        page_ids = jnp.take_along_axis(
+            block_tables, logical[:, None], axis=1)[:, 0]
+        rows = lengths - logical * page_size
+        kp, ks = numerics.kv_write_token(pol, cache["kp"], cache["ks"],
+                                         k_new[:, 0], page_ids, rows, key=kk,
+                                         write_mask=active)
+        vp, vs = numerics.kv_write_token(pol, cache["vp"], cache["vs"],
+                                         v_new[:, 0], page_ids, rows, key=vk,
+                                         write_mask=active)
+        out = numerics.attention(
+            q, kp, vp, ks, vs, block_tables, lengths + 1, pol,
+            n_kv_heads=KV, window=window, cap=cfg.attn_softcap, site=site,
+        )
     y = qlinear(out.reshape(B, 1, -1), p["wo"], pol, site=f"{site}.wo")
     return y, {"kp": kp, "vp": vp, "ks": ks, "vs": vs}
 

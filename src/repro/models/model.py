@@ -207,7 +207,8 @@ class Model:
         return logits, {"prefix": tuple(new_prefix), "blocks": new_caches}
 
     def decode_step_paged(self, params, cache, tokens, lengths, block_tables,
-                          *, page_size: int, key=None, active=None):
+                          *, page_size: int, key=None, active=None,
+                          fused: bool = True):
         """One decode step against the paged cache (serving path).
 
         tokens: [B] int32; lengths: [B] int32 per-slot context lengths
@@ -225,11 +226,11 @@ class Model:
         """
         return self._paged_token_step(
             params, cache, tokens, lengths, block_tables,
-            page_size=page_size, key=key, active=active,
+            page_size=page_size, key=key, active=active, fused=fused,
         )
 
     def _paged_token_step(self, params, cache, tokens, lengths, block_tables,
-                          *, page_size: int, key, active):
+                          *, page_size: int, key, active, fused: bool = True):
         """Shared body of the paged decode/mixed steps.
 
         ``active`` is None (every slot live — the plain decode path, traced
@@ -247,6 +248,7 @@ class Model:
             "page_size": page_size,
             "key": key,
             "active": active,
+            "fused": fused,
         }
         x = self._embed(params, tokens[:, None])
         if cfg.family == "encdec":
@@ -272,7 +274,7 @@ class Model:
         return logits, {"prefix": tuple(new_prefix), "blocks": new_caches}
 
     def step_paged(self, params, cache, tokens, lengths, n_new, block_tables,
-                   *, page_size: int, key=None):
+                   *, page_size: int, key=None, fused: bool = True):
         """Mixed prefill+decode step over the paged cache (the continuous
         scheduler's model call).
 
@@ -317,7 +319,7 @@ class Model:
             pos = lengths + jnp.minimum(t, jnp.maximum(n_new - 1, 0))
             logits, cache = self._paged_token_step(
                 params, cache, toks_t, pos, block_tables,
-                page_size=page_size, key=key, active=act,
+                page_size=page_size, key=key, active=act, fused=fused,
             )
             last = jnp.where(act[:, None], logits, last)
             return (cache, last), None

@@ -46,6 +46,7 @@ from .api import (
     kv_decode,
     kv_encode,
     kv_format,
+    kv_fused_write_attend,
     kv_quantized,
     kv_stochastic,
     kv_write_prefill,
@@ -74,6 +75,7 @@ __all__ = [
     "kv_decode",
     "kv_encode",
     "kv_format",
+    "kv_fused_write_attend",
     "kv_quantized",
     "kv_stochastic",
     "kv_write_prefill",

@@ -322,9 +322,48 @@ def attention(q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
     qk = pol.resolve("attention_qk", site) if pol is not None else OpPolicy()
     fmt = kv_format(pol)
     mode = qk.mode if qk.mode != "stochastic" else "rne"
-    impl = qk.impl if qk.impl in ("kernel", "ref") else "auto"
+    impl = qk.impl if qk.impl in ("kernel", "ref", "batch") else "auto"
     return paged_decode_attention(
         q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
         fmt=fmt, n_kv_heads=n_kv_heads, mode=mode, window=window, cap=cap,
-        impl=impl,
+        impl=impl, site=site,
+    )
+
+
+def kv_fused_write_attend(q, k_new, v_new, k_pages, v_pages, k_scale,
+                          v_scale, block_tables, lengths, pol: PolicyLike, *,
+                          n_kv_heads: int, k_key=None, v_key=None,
+                          write_mask=None, window: int = 0, cap: float = 0.0,
+                          site: str = ""):
+    """Fused decode-token KV write + paged attention, policy-resolved.
+
+    One launch replacing the ``kv_write_token`` x2 -> ``attention``
+    composition on the decode hot path; bit-identical to it on every
+    active (``write_mask``) lane.  ``lengths`` are pre-write; the write
+    lands at position ``lengths`` and attention spans ``lengths + 1``.
+    The KV write fmt/mode resolve exactly like ``kv_write_token``, the
+    QK^T fmt/mode/impl exactly like ``attention``.
+
+    Returns ``(out, new_k_pages, new_k_scale, new_v_pages, new_v_scale)``.
+    """
+    from ..kernels.paged_attention import fused_decode_write_attend
+
+    has_key = k_key is not None
+    if is_legacy_config(pol):
+        fmt = pol.kv_fmt if pol.kv_cache_fp8 else None
+        kv_mode = "stochastic" if has_key else pol.mode
+        mode, impl = pol.mode, "auto"
+    else:
+        fmt = kv_format(pol)
+        kv_mode = ("rne" if pol is None
+                   else _kv_mode(pol, "kv_write", has_key))
+        qk = (pol.resolve("attention_qk", site) if pol is not None
+              else OpPolicy())
+        mode = qk.mode if qk.mode != "stochastic" else "rne"
+        impl = qk.impl if qk.impl in ("kernel", "ref", "batch") else "auto"
+    return fused_decode_write_attend(
+        q, k_new, v_new, k_pages, v_pages, k_scale, v_scale, block_tables,
+        lengths, fmt=fmt, n_kv_heads=n_kv_heads, mode=mode, kv_mode=kv_mode,
+        k_key=k_key, v_key=v_key, write_mask=write_mask, window=window,
+        cap=cap, impl=impl, site=site,
     )

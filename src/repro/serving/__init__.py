@@ -21,6 +21,7 @@ from .page_pool import (
     page_qtensor,
     pow2_page_scale,
     rescale_codes,
+    token_row_codes,
     write_prefill_pages,
     write_token_page,
 )
@@ -63,6 +64,7 @@ __all__ = [
     "pow2_page_scale",
     "rescale_codes",
     "save_snapshot",
+    "token_row_codes",
     "write_prefill_pages",
     "write_token_page",
 ]

@@ -111,6 +111,10 @@ class PagePool:
         self.ref = np.zeros((num_pages,), np.int32)  # block-table references
         self.block_tables = np.zeros((slots, max_pages_per_slot), np.int32)
         self.pages_of: List[List[int]] = [[] for _ in range(slots)]
+        # bumped on every block-table mutation; the engine compares it
+        # against the version of its cached device copy so an unchanged
+        # table costs zero host->device transfers (``host_transfers_total``)
+        self.version = 0
         # prefix cache: chunk hash -> page id, LRU over unreferenced entries
         self._index: Dict[str, int] = {}
         self._page_key: Dict[int, str] = {}
@@ -228,6 +232,7 @@ class PagePool:
         start = len(owned)
         owned.extend(ids)
         self.block_tables[slot, start:start + len(ids)] = ids
+        self.version += 1
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return ids
 
@@ -249,6 +254,7 @@ class PagePool:
         start = len(owned)
         owned.extend(ids)
         self.block_tables[slot, start:start + len(ids)] = ids
+        self.version += 1
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
 
     def _release_page(self, pid: int) -> None:
@@ -269,6 +275,7 @@ class PagePool:
             self._release_page(pid)
         self.pages_of[slot] = []
         self.block_tables[slot] = 0
+        self.version += 1
 
     def cow_page(self, slot: int, logical: int) -> Tuple[int, int]:
         """Copy-on-write: replace the shared page at logical index
@@ -281,6 +288,7 @@ class PagePool:
         self.ref[new] = 1
         self.pages_of[slot][logical] = new
         self.block_tables[slot, logical] = new
+        self.version += 1
         self._release_page(old)
         self.cow_copies += 1
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
@@ -358,6 +366,7 @@ class PagePool:
             assert self.ref[pid] == 0, f"spilled page {pid} still shared"
         self.pages_of[slot] = []
         self.block_tables[slot] = 0
+        self.version += 1
         spilled_set = set(spilled)  # hoisted: O(free + spilled), built once
         self._free = spilled + [i for i in self._free if i not in spilled_set]
         self.spills += 1
@@ -394,6 +403,7 @@ class PagePool:
                 table[i] = next(it)
         self.pages_of[slot] = list(table)
         self.block_tables[slot, :total] = table
+        self.version += 1
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         self.restores += 1
         return fresh
@@ -485,6 +495,7 @@ class PagePool:
         self._pinned = {int(pid): int(pins)
                         for pid, pins in state["pinned"].items()}
         self._seized = set()
+        self.version += 1
         for name, val in state["counters"].items():
             setattr(self, name, val)
         self.assert_invariants()
@@ -495,12 +506,65 @@ class PagePool:
         if need > 0:
             self.alloc(slot, need)
 
+    def ensure_capacity_batch(self, n_tokens) -> None:
+        """Grow every slot to hold ``n_tokens[slot]`` tokens in one
+        bookkeeping pass (entry 0 or negative leaves a slot alone).
+
+        The per-step replacement for calling :meth:`ensure_capacity` in a
+        per-slot loop: one array pass computes every slot's page deficit,
+        one :meth:`_take_free` covers the whole step (one exhaustion check,
+        one eviction sweep), and the version counter bumps once, so the
+        engine re-uploads the block tables at most once per step."""
+        n_tokens = np.asarray(n_tokens, np.int64)
+        assert n_tokens.shape == (self.slots,), (
+            f"expected one token count per slot, got {n_tokens.shape}"
+        )
+        owned = np.fromiter((len(p) for p in self.pages_of), np.int64,
+                            count=self.slots)
+        need = -(-n_tokens // self.page_size) - owned
+        need = np.where(n_tokens > 0, np.maximum(need, 0), 0)
+        total = int(need.sum())
+        if total == 0:
+            return
+        over = np.nonzero(owned + need > self.max_pages_per_slot)[0]
+        if over.size:
+            raise RuntimeError(
+                f"slot {int(over[0])} exceeds max_pages_per_slot="
+                f"{self.max_pages_per_slot}"
+            )
+        ids = self._take_free(total)
+        self.ref[ids] = 1
+        off = 0
+        for slot in np.nonzero(need)[0]:
+            n = int(need[slot])
+            chunk = ids[off:off + n]
+            start = int(owned[slot])
+            self.pages_of[slot].extend(chunk)
+            self.block_tables[slot, start:start + n] = chunk
+            off += n
+        self.version += 1
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+
     def writable(self, pid: int) -> bool:
         """True iff a slot may scribble into ``pid``: exclusively owned
         (one reference, no pins) and not published in the prefix index."""
         return (pid != 0 and self.ref[pid] == 1
                 and self._pinned.get(pid, 0) == 0
                 and pid not in self._page_key)
+
+    def writable_mask(self) -> np.ndarray:
+        """Vectorized :meth:`writable`: boolean ``[num_pages]`` mask, so
+        per-step write-safety checks are one fancy-index instead of a
+        python loop over every active slot's pages."""
+        mask = self.ref == 1
+        mask[0] = False
+        for pid, pins in self._pinned.items():
+            if pins:
+                mask[pid] = False
+        if self._page_key:
+            mask[np.fromiter(self._page_key.keys(), np.int64,
+                             count=len(self._page_key))] = False
+        return mask
 
     # ------------------------------------------------------------------ #
     def assert_invariants(self) -> None:
@@ -642,6 +706,34 @@ def rescale_codes(codes, inv_scale, fmt: str, mode: str = "stochastic",
     return lns_op(fmt, "mul", mode, codes, ratio)
 
 
+def token_row_codes(scales, new, page_ids, rows, *,
+                    fmt: Optional[str], mode: str = "stochastic", key=None,
+                    write_mask=None, store_dtype=None):
+    """The per-row half of ``write_token_page``: everything except the
+    scatter.  Returns ``(masked_page_ids, row_codes [B, KV, hd], page_scale
+    [B])`` — the write-mask redirect to the null page, the row-0 pow2 scale
+    claim, and the (stochastic) encode, in exactly ``write_token_page``'s
+    op order.  The fused decode kernel consumes the row codes directly
+    (``kernels.paged_attention.fused_decode_write_attend``) so the
+    attention launch never reads the scattered page arrays.
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+    if write_mask is not None:
+        write_mask = jnp.asarray(write_mask, bool)
+        page_ids = jnp.where(write_mask, page_ids, 0)
+    if fmt is None:
+        codes = new if store_dtype is None else new.astype(store_dtype)
+        return page_ids, codes, jnp.asarray(scales, jnp.float32)[page_ids]
+    amax = jnp.max(jnp.abs(jnp.asarray(new, jnp.float32)), axis=(1, 2))
+    fresh = rows == 0
+    if write_mask is not None:
+        fresh = fresh & write_mask  # masked lanes never claim a scale
+    s = jnp.where(fresh, pow2_page_scale(amax, fmt), scales[page_ids])
+    codes = encode_kv(new, s[:, None, None], fmt, mode, key)
+    return page_ids, codes, s
+
+
 def write_token_page(pages, scales, new, page_ids, rows, *,
                      fmt: Optional[str], mode: str = "stochastic", key=None,
                      write_mask=None):
@@ -660,22 +752,14 @@ def write_token_page(pages, scales, new, page_ids, rows, *,
     absmax; later rows reuse the page's existing scale.  Returns
     (pages, scales).
     """
-    page_ids = jnp.asarray(page_ids, jnp.int32)
+    page_ids, codes, s = token_row_codes(
+        scales, new, page_ids, rows, fmt=fmt, mode=mode, key=key,
+        write_mask=write_mask, store_dtype=pages.dtype,
+    )
     rows = jnp.asarray(rows, jnp.int32)
-    if write_mask is not None:
-        write_mask = jnp.asarray(write_mask, bool)
-        page_ids = jnp.where(write_mask, page_ids, 0)
-    if fmt is None:
-        pages = pages.at[page_ids, rows].set(new.astype(pages.dtype))
-        return pages, scales
-    amax = jnp.max(jnp.abs(jnp.asarray(new, jnp.float32)), axis=(1, 2))
-    fresh = rows == 0
-    if write_mask is not None:
-        fresh = fresh & write_mask  # masked lanes never claim a scale
-    s = jnp.where(fresh, pow2_page_scale(amax, fmt), scales[page_ids])
-    codes = encode_kv(new, s[:, None, None], fmt, mode, key)
     pages = pages.at[page_ids, rows].set(codes)
-    scales = scales.at[page_ids].set(s)
+    if fmt is not None:
+        scales = scales.at[page_ids].set(s)
     return pages, scales
 
 

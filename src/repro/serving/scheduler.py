@@ -163,6 +163,26 @@ class Request:
         return len(self.out) >= self.gen
 
 
+class _StepLogits:
+    """Logits of an async-dispatched engine step, materialized to host on
+    first row access — the token-emission boundary.  Until then the device
+    computes while the scheduler's host-side bookkeeping runs; a step
+    whose rows are never read (every lane mid-prefill) never blocks."""
+
+    def __init__(self, eng, dev, clock):
+        self._eng = eng
+        self._dev = dev
+        self._clock = clock
+        self._host = None
+        self.t_sync = None  # emission-boundary timestamp, None if unread
+
+    def __getitem__(self, slot):
+        if self._host is None:
+            self._host = self._eng.sync_logits(self._dev)
+            self.t_sync = self._clock()
+        return self._host[slot]
+
+
 class ContinuousScheduler:
     """Per-step admission / chunked-prefill / preemption loop.
 
@@ -556,9 +576,12 @@ class ContinuousScheduler:
                     plan.pop(self._preempt_victim(), None)
                 return
             plan.pop(self._preempt_victim(), None)
+        # one batched allocation pass for the whole step (single pool
+        # version bump -> at most one block-table upload in the engine)
+        tokens_needed = np.zeros((self.eng.slots,), np.int64)
         for slot, (_, n) in plan.items():
-            req = self.active[slot]
-            self.pool.ensure_capacity(slot, req.length + n)
+            tokens_needed[slot] = self.active[slot].length + n
+        self.pool.ensure_capacity_batch(tokens_needed)
 
     # ------------------------------------------------------------------ #
     def _commit(self, plan: Dict[int, tuple], logits: np.ndarray) -> None:
@@ -624,7 +647,9 @@ class ContinuousScheduler:
 
     def step(self) -> None:
         """One scheduler step: expire/cancel, admit, fit (maybe preempt),
-        run the mixed model step, sample/stream, evict finished slots."""
+        dispatch the mixed model step asynchronously, overlap host
+        bookkeeping with the device compute, sample/stream at the
+        emission boundary, evict finished slots."""
         with self.tel.span("admit"):
             self._expire()
             self._admit()
@@ -645,15 +670,29 @@ class ContinuousScheduler:
                 lengths[slot] = self.active[slot].length
                 n_new[slot] = n
             t0 = self.tel.clock()
-            logits = self.eng.step_chunk(toks, lengths, n_new)
-            dt = self.tel.clock() - t0
+            # async dispatch: the jitted step returns a device future; the
+            # commit below runs its host-side bookkeeping (prefill
+            # accounting, prefix-page registration) while the device
+            # computes, and blocks only when the first sampled row is
+            # actually read.  A step that samples no token (every lane
+            # mid-prefill) never blocks at all — the next step's
+            # plan/fit/dispatch overlaps this one's compute.
+            logits = _StepLogits(
+                self.eng, self.eng.step_chunk(toks, lengths, n_new,
+                                              sync=False),
+                self.tel.clock,
+            )
+            with self.tel.span("host"):
+                self._commit(plan, logits)
+            # critical-path wall time: dispatch -> emission sync (or
+            # dispatch only, for steps that never emitted)
+            dt = (logits.t_sync if logits.t_sync is not None
+                  else self.tel.clock()) - t0
             if pure_decode:
                 self.decode_wall_s += dt
                 self.decode_step_tokens += len(plan)
             else:
                 self.prefill_wall_s += dt
-            with self.tel.span("host"):
-                self._commit(plan, logits)
             self.occupied_slot_steps += len(plan)
         with self.tel.span("host"):
             self.pool.observe_step()

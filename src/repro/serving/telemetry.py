@@ -134,8 +134,13 @@ METRIC_CATALOG: Tuple[MetricSpec, ...] = (
                buckets=_LATENCY_BUCKETS),
     MetricSpec("serve_phase_seconds", "histogram",
                "Engine step time decomposed by phase "
-               "(admit/prefill/decode/kv_write/host + auxiliary spans).",
+               "(admit/prefill/decode/kv_write/host/sync + auxiliary "
+               "spans).",
                labels=("phase",), buckets=_PHASE_BUCKETS),
+    MetricSpec("host_transfers_total", "counter",
+               "Block-table host->device uploads (at most one per step: "
+               "the engine caches the device copy and re-uploads only "
+               "when the pool's version counter moves)."),
     # -- page pool ---------------------------------------------------
     MetricSpec("pool_pages", "gauge",
                "Total data pages in the pool (capacity, excludes the "

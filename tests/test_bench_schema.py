@@ -1,0 +1,68 @@
+"""Schema validation of every checked-in ``BENCH_*.json`` (ISSUE 8).
+
+The benchmark harness writes ``{name: {value, derived, units}}`` rows
+(``benchmarks/run.py write_json``); downstream tooling (the perf gate,
+the docs generator, trajectory plots) indexes these files by exact key
+shape, so drift in the output format must be caught at test time, not
+when a gate silently reads a missing key.  Claims are load-bearing too:
+any bench family that advertises bit-identity must carry its
+``*_equal`` flag, and the flag must actually be 1 — a checked-in
+baseline with a falsified identity claim should never survive CI.
+"""
+import json
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCHES = sorted(ROOT.glob("BENCH_*.json"))
+
+# bench families that CLAIM bit-identity somewhere (docs/derived strings)
+# and therefore must carry the flag row, set to 1
+REQUIRED_FLAGS = {
+    "serve_continuous": ["serve_continuous/outputs_equal"],
+    "serve_prefix": ["serve_prefix/outputs_equal"],
+    "serve_chaos": ["serve_chaos/survivors_equal"],
+    "serve_paged_gap": ["serve_paged_gap/fused_outputs_equal",
+                        "serve_paged_gap/prefix_outputs_equal",
+                        "serve_paged_gap/impl_outputs_equal"],
+}
+
+
+def test_bench_files_present_and_contiguous():
+    """BENCH_1..BENCH_N with no gaps: every PR's acceptance artifact is
+    still checked in."""
+    assert BENCHES, "no BENCH_*.json at the repo root"
+    nums = sorted(int(p.stem.split("_")[1]) for p in BENCHES)
+    assert nums == list(range(1, len(nums) + 1)), nums
+    assert max(nums) >= 7  # through the ISSUE-8 artifact
+
+
+@pytest.mark.parametrize("path", BENCHES, ids=lambda p: p.name)
+def test_bench_schema(path):
+    doc = json.loads(path.read_text())
+    assert isinstance(doc, dict) and doc, path.name
+    for name, row in doc.items():
+        # slash-separated row names, family first: "family/.../metric"
+        assert re.fullmatch(r"[A-Za-z0-9_.+-]+(/[A-Za-z0-9_.+-]+)+", name), name
+        assert isinstance(row, dict), name
+        assert set(row) == {"value", "derived", "units"}, name
+        assert isinstance(row["derived"], str), name
+        assert isinstance(row["units"], str), name
+        # values are numbers or numeric strings (harness formats floats
+        # as strings to fix the precision it prints)
+        v = row["value"]
+        assert isinstance(v, (int, float, str)) and not isinstance(v, bool), name
+        float(v)  # raises if a string value is not numeric
+        if name.rsplit("/", 1)[-1].endswith("_equal"):
+            assert int(v) == 1, f"{path.name}: identity flag {name} is {v}"
+
+
+@pytest.mark.parametrize("path", BENCHES, ids=lambda p: p.name)
+def test_bench_claimed_flags_present(path):
+    doc = json.loads(path.read_text())
+    families = {name.split("/", 1)[0] for name in doc}
+    for fam in families:
+        for flag in REQUIRED_FLAGS.get(fam, []):
+            assert flag in doc, f"{path.name}: {fam} rows lack {flag}"

@@ -372,6 +372,98 @@ def test_page_pool_unpin_parks_registered_pages():
     assert pool.match_prefix(["h0"]) == [ids[0]]  # ... and still a hit
 
 
+def test_scheduler_500_step_randomized_stress(cfg, monkeypatch):
+    """500-step randomized soak (ISSUE 8): Poisson admissions, client
+    cancellations, preemption storms, pool-exhaustion seizures, deadline
+    expiries and prefix-cache hits, with pool invariants checked after
+    every step.  Terminal-state accounting must sum exactly to the
+    admitted request count, and every request that *finishes* under
+    stress must emit the fault-free oracle run's tokens bit for bit
+    (stochastic KV rounding ON, prefix cache ON)."""
+    monkeypatch.setenv("REPRO_CHECK_INVARIANTS", "1")
+    rng = np.random.default_rng(2026)
+    shared = rng.integers(0, cfg.vocab, size=4)  # one full prefix chunk
+
+    reqs, arrive = [], 0
+    while len(reqs) < 64:
+        # Poisson-spaced bursts of 1-3 arrivals: bursts overlap requests
+        # in the slots (so storms have victims), gaps stretch the run
+        # past 500 steps
+        arrive += int(rng.poisson(16))
+        for _ in range(int(rng.integers(1, 4))):
+            if len(reqs) == 64:
+                break
+            rid = len(reqs)
+            if rng.random() < 0.3:  # 30%: share a cacheable prompt head
+                prompt = np.concatenate(
+                    [shared, rng.integers(0, cfg.vocab, size=int(
+                        rng.integers(1, 5)))])
+            else:
+                prompt = rng.integers(0, cfg.vocab,
+                                      size=int(rng.integers(3, 9)))
+            reqs.append((rid, prompt, int(rng.integers(3, 8)), arrive))
+    # disjoint fault cohorts: deadlines that CANNOT be met (2 steps <
+    # prefill + gen), and cancels that CANNOT be too late (arrival + 2 <
+    # earliest possible finish)
+    doomed = set(int(r) for r in rng.choice(64, size=5, replace=False))
+    cancels = {}
+    for rid in rng.choice([r for r in range(64) if r not in doomed],
+                          size=5, replace=False):
+        cancels.setdefault(reqs[rid][3] + 2, []).append(int(rid))
+
+    def build(stressed):
+        eng = _engine(cfg, slots=3, num_pages=12, prefix_cache=True)
+        sched = ContinuousScheduler(eng, chunk=4)
+        for rid, prompt, gen, arrival in reqs:
+            sched.add(Request(
+                rid=rid, prompt=prompt.copy(), gen=gen, arrival=arrival,
+                deadline_steps=2 if stressed and rid in doomed else None))
+        return eng, sched
+
+    _, oracle = build(stressed=False)
+    want = oracle.run()
+    assert len(want) == 64  # fault-free: everything finishes
+
+    eng, sched = build(stressed=True)
+    plan = FaultPlan(seed=11, pool_exhaustion=0.08, exhaustion_pages=2,
+                     exhaustion_hold=3, preemption_storm=0.10, horizon=600)
+    h = ChaosHarness(sched, plan)
+    for _ in range(2000):
+        if not sched.pending():
+            break
+        for rid in cancels.get(sched.steps, ()):
+            assert sched.cancel(rid), rid
+        h.step()
+    else:
+        pytest.fail("stress run did not drain within 2000 steps")
+    h.release_all_seizures()
+    eng.pool.assert_invariants()
+
+    assert sched.steps >= 500, sched.steps
+    assert h.counts["exhaustion"] > 0 and h.counts["storm"] > 0
+    assert sched.preemptions > 0 and sched.restores > 0
+    assert sched.prefix_hit_tokens > 0
+    # terminal accounting: every admitted request reached exactly one
+    # terminal state, and the counts add up to the admitted total
+    counts = sched.terminal_counts
+    assert sum(counts.values()) == 64
+    assert counts["timed_out"] == len(doomed)
+    assert counts["cancelled"] == sum(len(v) for v in cancels.values())
+    assert counts.get("failed", 0) == 0  # no livelock-breaker firings
+    assert counts["finished"] == 64 - 10
+    terminal = {"finished", "timed_out", "cancelled"}
+    for rid, (state, _) in sched.statuses().items():
+        assert state in terminal, (rid, state)
+    # survivors: bit-identical to the fault-free oracle
+    assert sorted(sched.outputs) == sorted(
+        r for r in range(64)
+        if r not in doomed and r not in {x for v in cancels.values()
+                                         for x in v})
+    for rid, toks in sched.outputs.items():
+        assert toks == want[rid], rid
+    _pool_clean(eng)
+
+
 def test_write_heartbeat_atomic_replace(tmp_path):
     p = tmp_path / "hb" / "heartbeat.json"
     fault.write_heartbeat(p, 3, extra={"active": 1})

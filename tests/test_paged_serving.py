@@ -261,3 +261,48 @@ def test_paged_engine_reuses_freed_pages():
     outs, _ = serve.run(eng, queue, gen=6, quiet=True)
     assert len(outs) == 4
     assert eng.pool.free_pages == 4  # everything released
+
+
+def test_host_transfers_pinned_one_per_allocating_step():
+    """Block-table uploads are batched per STEP, not per slot: exactly one
+    ``host_transfers_total`` increment on any step that changes the block
+    tables (even when every slot allocates a page simultaneously), and
+    zero on steady-state in-page decode steps, which reuse the engine's
+    cached device copy."""
+    from repro.configs import get_config
+    from repro.launch import serve
+
+    cfg = get_config("qwen2-0.5b", smoke=True, quant="fp8_w8kv8")
+    eng = serve.Engine(cfg, slots=2, max_seq=16, cache_impl="paged",
+                       page_size=4)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=3) for _ in range(2)]
+
+    def transfers():
+        return eng.tel.counter_value("host_transfers_total")
+
+    # one chunked-prefill step allocates a page for BOTH slots: one upload
+    eng.tail_prefill([(s, p, 0) for s, p in enumerate(prompts)])
+    assert transfers() == 1
+
+    lengths = np.array([3, 3], np.int32)
+    for _ in range(6):
+        owned = len(eng.pool.pages_of[0])
+        # both slots cross the same page boundary on the same step — a
+        # single batched upload must cover them
+        allocating = -(-(int(lengths[0]) + 1) // 4) > owned
+        before = transfers()
+        toks = rng.integers(0, cfg.vocab, size=(2,)).astype(np.int32)
+        eng.decode_paged(toks, lengths)
+        assert transfers() - before == (1 if allocating else 0), lengths
+        lengths += 1
+
+    # scheduler-level bound: a full run never uploads more than once per
+    # step (and skips the upload on most steady-state decode steps)
+    eng2 = serve.Engine(cfg, slots=2, max_seq=16, cache_impl="paged",
+                        page_size=4)
+    queue = [rng.integers(0, cfg.vocab, size=4) for _ in range(3)]
+    _, stats = serve.run(eng2, queue, gen=6, quiet=True,
+                         scheduler="continuous")
+    n = eng2.tel.counter_value("host_transfers_total")
+    assert 0 < n <= stats["steps"]
