@@ -49,6 +49,11 @@ Framework:
                           (or ``--gate=counts`` in CI) fails on
                           regression vs the checked-in baseline
                           -> BENCH_7.json.
+  serve_mesh              tensor-parallel paged serving: TP=1 vs TP=2 on
+                          forced host devices (tok/s both ways, token +
+                          cache bit-identity flags, stochastic KV ON);
+                          ``--gate`` fails unless the streams match
+                          -> BENCH_8.json.
   roofline_summary        key roofline numbers from the dry-run artifacts.
 """
 import json
@@ -736,6 +741,93 @@ def _gate_paged_gap(ratio, prefix_speedup, steps, transfers, outs):
     print(f"# serve_paged_gap gate OK ({'counts only' if GATE == 'counts' else 'full'})")
 
 
+def serve_mesh():
+    """The ISSUE-10 tensor-parallel serving acceptance bench ->
+    BENCH_8.json.
+
+    Runs the same shared-system-prompt smoke stream through the paged
+    continuous-batching engine single-device (TP=1) and sharded over a
+    (1, 2) device mesh (TP=2), stochastic FP8 KV rounding ON, both
+    engines WARM (one compile run before the measured run).  Emits tok/s
+    for both cells plus the acceptance flags: token streams bit-identical
+    and the final paged KV cache (codes + scales) bitwise equal across
+    the two engines.  ``--gate`` fails (SystemExit) if either flag is 0.
+
+    Needs >= 2 devices: run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (set before
+    jax initializes) or on a real slice.  The acceptance run:
+    ``python benchmarks/run.py serve_mesh --json=BENCH_8.json``.
+    """
+    from repro.configs import get_config
+    from repro.launch import serve
+    from repro.launch.mesh import make_production_mesh
+
+    if len(jax.devices()) < 2:
+        msg = ("serve_mesh needs >= 2 devices; run under "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+               "(set before jax initializes)")
+        if GATE:
+            raise SystemExit(f"serve_mesh gate FAILED: {msg}")
+        print(f"# serve_mesh SKIPPED: {msg}")
+        return
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, size=24)  # the common system prompt
+    suffixes = [4, 6, 5, 7, 4, 6, 5, 4]
+    gen = 8
+    queue = [np.concatenate([shared, rng.integers(0, 256, size=s)])
+             for s in suffixes]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(3.0, size=len(queue)))
+    ).astype(int)
+    cfg = get_config("qwen2-0.5b", smoke=True, policy="serve_fp8_paged")
+    cells = [("tp1", None), ("tp2", make_production_mesh(shape=(1, 2)))]
+    outs, results, engines = {}, {}, {}
+    for name, mesh in cells:
+        eng = serve.Engine(cfg, slots=3, max_seq=48, cache_impl="paged",
+                           page_size=8, stochastic_kv=True, mesh=mesh)
+        serve.run(eng, [q.copy() for q in queue], gen=gen, quiet=True,
+                  arrivals=arrivals, scheduler="continuous",
+                  chunk=8)  # warm: compile the traces
+        outs[name], stats = serve.run(eng, [q.copy() for q in queue],
+                                      gen=gen, quiet=True,
+                                      arrivals=arrivals,
+                                      scheduler="continuous", chunk=8)
+        results[name] = stats
+        engines[name] = eng
+        emit(f"serve_mesh/qwen2-0.5b-smoke/{name}/tok_s",
+             f"{stats['tok_s']:.2f}",
+             f"warm steady-state; steps={stats['steps']} slots=3 "
+             f"gen={gen} stochastic KV forced-host devices", "tok/s")
+    emit("serve_mesh/tp_size", engines["tp2"].tp_size,
+         "model-axis size of the TP cell's mesh")
+    ratio = results["tp2"]["tok_s"] / results["tp1"]["tok_s"]
+    emit("serve_mesh/tp2_over_tp1", f"{ratio:.3f}",
+         "TP=2/TP=1 tok_s on forced HOST devices — a correctness-scaling "
+         "proxy (two XLA partitions share one CPU), not a speedup claim",
+         "x")
+    tokens_equal = int(outs["tp1"] == outs["tp2"])
+    emit("serve_mesh/outputs_equal", tokens_equal,
+         "TP=1 vs TP=2 token streams bit-identical (stochastic KV; "
+         "concatenation-only sharding, no partial-sum collectives)")
+    c1 = jax.tree.leaves(jax.device_get(engines["tp1"].cache))
+    c2 = jax.tree.leaves(jax.device_get(engines["tp2"].cache))
+    cache_equal = int(all(np.array_equal(a, b) for a, b in zip(c1, c2))
+                      and len(c1) == len(c2))
+    emit("serve_mesh/cache_equal", cache_equal,
+         "final paged KV cache (codes + scales) bitwise equal across "
+         "TP=1 and TP=2 engines")
+    if GATE:
+        errors = []
+        if not tokens_equal:
+            errors.append("TP=1 vs TP=2 token streams diverged")
+        if not cache_equal:
+            errors.append("TP=1 vs TP=2 final KV caches diverged")
+        if errors:
+            raise SystemExit("serve_mesh gate FAILED:\n  - "
+                             + "\n  - ".join(errors))
+        print("# serve_mesh gate OK")
+
+
 def flash_attention_kernel():
     from repro.kernels.flash_attention import flash_attention
 
@@ -764,6 +856,7 @@ BENCHES = {
     "serve_chaos": serve_chaos,
     "serve_phases": serve_phases,
     "serve_paged_gap": serve_paged_gap,
+    "serve_mesh": serve_mesh,
     "roofline_summary": roofline_summary,
 }
 

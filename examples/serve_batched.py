@@ -5,7 +5,7 @@ Run:  PYTHONPATH=src python examples/serve_batched.py \
           [--prompt-lens 4,12,8] [--shared-prefix 16] [--quant fp8_w8kv8] \
           [--scheduler continuous|bucketed] [--cache-impl paged|dense] \
           [--prefix-cache on|off] [--page-size 8] [--pages N] [--chunk 4] \
-          [--arrival-rate 0.5] [--stream]
+          [--arrival-rate 0.5] [--mesh 1x2] [--stream]
 """
 import pathlib
 import sys
@@ -79,6 +79,11 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="mean arrivals per step (Poisson stream; 0 = all "
                          "queued at step 0)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="run the engine tensor-parallel over a device "
+                         "mesh, e.g. '1x2' (token streams bit-identical "
+                         "to single-device; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens the step they are sampled")
     args = ap.parse_args()
@@ -101,6 +106,8 @@ def main():
         argv += ["--quant", args.quant]
     else:
         argv += ["--policy", args.policy or "serve_fp8_paged"]
+    if args.mesh is not None:
+        argv += ["--mesh", args.mesh]
     if args.stream:
         argv.append("--stream")
     serve.main(argv)

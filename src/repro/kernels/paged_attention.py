@@ -345,6 +345,55 @@ def paged_attention_batch(
     return _combine_partials(m, l, o)
 
 
+def paged_attention_partials(
+    q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths, *,
+    fmt: Optional[str], mode: str, page_size: int, KV: int, G: int,
+    window: int = 0, cap: float = 0.0,
+):
+    """One shard's locally-combined softmax partials (flash-decoding
+    KV-split serving): (m [B, KV, G], l [B, KV, G], o [B, KV, G, dv]),
+    with ``o`` still un-normalized.  Pages this shard does not hold are
+    masked by pointing their block-table entries at the null page with
+    ``lengths`` clipped, or simply by passing a block table whose rows
+    list only local pages — fully masked pages contribute m = -inf and
+    drop out of the combine.  Feed the result to
+    :func:`combine_partials_psum` inside ``shard_map``.
+    """
+    m, l, o = _batch_partials(
+        q_op, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+        fmt=fmt, mode=mode, KV=KV, G=G, window=window, cap=cap,
+    )
+    M = m.max(axis=1)                                    # [B, KV, G]
+    w = jnp.exp(m - M[:, None])
+    l_loc = (w * l).sum(axis=1)
+    o_loc = (w[..., None] * o).sum(axis=1)
+    return M, l_loc, o_loc
+
+
+def combine_partials_psum(m, l, o, axis_name: str):
+    """Cross-shard log-sum-exp combine: one pmax + two psums.
+
+    Inside ``shard_map``, each shard holds its pages' locally-combined
+    partials (from :func:`paged_attention_partials`); this merges them
+    into the normalized attention output [B, KV*G, dv].
+
+    Collective placement: this is the flash-decoding KV-split path the
+    two-pass softmax was designed for — allclose-exact, but NOT
+    bit-identical across shard counts (the floating-point merge order of
+    page partials changes with the split).  The serving engine's
+    bit-identical TP therefore shards *heads* (cross-shard combine = pure
+    concatenation) and reserves this helper for throughput-oriented
+    page-sharded deployments where allclose is the contract.
+    """
+    M = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - M)
+    l_tot = jax.lax.psum(w * l, axis_name)
+    o_tot = jax.lax.psum(w[..., None] * o, axis_name)
+    out = o_tot / jnp.maximum(l_tot, 1e-37)[..., None]
+    B, KV, G, dv = out.shape
+    return out.reshape(B, KV * G, dv)
+
+
 # --------------------------------------------------------------------------- #
 # Pallas kernel
 # --------------------------------------------------------------------------- #

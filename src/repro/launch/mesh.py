@@ -1,14 +1,20 @@
-"""Production mesh construction.
+"""Mesh construction for training and serving.
 
-Single pod: (data=16, model=16) — 256 chips (one v5e pod).
-Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis joins
-the FSDP/data-parallel axes (DCN-friendly: only gradient reduce-scatter and
-FSDP all-gathers cross pods, never TP collectives).
+Production defaults: single pod (data=16, model=16) — 256 chips (one v5e
+pod) — or multi-pod (pod=2, data=16, model=16) — 512 chips; the ``pod``
+axis joins the FSDP/data-parallel axes (DCN-friendly: only gradient
+reduce-scatter and FSDP all-gathers cross pods, never TP collectives).
+
+``make_production_mesh`` also accepts an arbitrary ``(data, model)``
+shape so the same entry point builds small serving meshes (TP=2 on two
+forced host devices) and full pods.
 
 Defined as functions so importing this module never touches jax device
 state (the dry-run must set XLA_FLAGS before any device query).
 """
 from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -16,20 +22,59 @@ import jax
 from jax.sharding import Mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: Optional[Sequence[int]] = None,
+                         axes: Optional[Sequence[str]] = None) -> Mesh:
+    """Build a mesh over the process's devices.
+
+    Without arguments this keeps the historical pod defaults; ``shape``
+    overrides them with any ``(data, model)`` (or custom-``axes``)
+    layout, e.g. ``shape=(1, 2)`` for a TP=2 host-device test mesh.
+    """
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    else:
+        shape = tuple(int(s) for s in shape)
+        if any(s < 1 for s in shape):
+            raise ValueError(f"mesh shape must be positive, got {shape}")
+        if axes is None:
+            if len(shape) == 2:
+                axes = ("data", "model")
+            elif len(shape) == 3:
+                axes = ("pod", "data", "model")
+            else:
+                raise ValueError(
+                    f"pass explicit axes for a {len(shape)}-d mesh shape "
+                    f"{shape}")
+    axes = tuple(axes)
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} do not match mesh shape {shape}")
     n = int(np.prod(shape))
     devices = jax.devices()
-    if len(devices) == n:
-        return jax.make_mesh(shape, axes)
     if len(devices) < n:
         raise RuntimeError(
-            f"need {n} devices for mesh {shape}, have {len(devices)} — "
-            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+            f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
+            f"{len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "(set before jax initializes) or on a slice with enough chips"
         )
-    # more devices than needed (e.g. 512 fake devices, single-pod mesh)
+    # more devices than needed (e.g. 8 fake devices, (1, 2) serving mesh)
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def parse_mesh_arg(spec: str) -> Tuple[int, ...]:
+    """Parse a CLI mesh spec like ``"1x2"`` into an int shape tuple."""
+    try:
+        shape = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"bad mesh spec {spec!r}: expected DATAxMODEL, e.g. 1x2")
+    if len(shape) != 2 or any(s < 1 for s in shape):
+        raise ValueError(
+            f"bad mesh spec {spec!r}: expected two positive factors "
+            "DATAxMODEL, e.g. 1x2")
+    return shape
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:

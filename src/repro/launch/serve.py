@@ -48,6 +48,7 @@ CPU smoke scale:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import hashlib
 from collections import Counter
 from typing import Dict, List, Optional, Tuple
@@ -89,7 +90,8 @@ class Engine:
                  stochastic_kv: Optional[bool] = None,
                  prefix_cache: bool = False,
                  fused_decode: bool = True,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 mesh=None, static_weights: bool = False):
         self.cfg = cfg
         # fused_decode=True runs decode steps as one fused KV-write+attend
         # launch; False keeps the two-launch write-then-attend composition.
@@ -104,6 +106,47 @@ class Engine:
         self.slots = slots
         self.cache_impl = cache_impl
         self.params = self.model.init(jax.random.PRNGKey(rng_seed))
+        # ``mesh``: run the engine tensor-parallel over a
+        # jax.sharding.Mesh.  Weights shard concatenation-only (serve_
+        # param_pspecs), activations are pinned by the serve hint roles,
+        # page codes shard over the KV-head dim — token streams are
+        # BIT-IDENTICAL to the mesh=None engine (tests/
+        # test_serving_distributed.py).  ``static_weights`` additionally
+        # quantizes eligible weights to QTensor carriers (codes sharded
+        # like their weight, scales replicated); opt-in because it
+        # changes the matmul path vs the plain-weight engine.
+        self.mesh = mesh
+        self._hint_specs = None
+        self._tp = 1
+        if mesh is not None:
+            self._validate_mesh(cfg, mesh, cache_impl)
+            from ..parallel import sharding
+            from ..parallel.hints import serve_hint_specs
+
+            self._tp = sharding.tp_size(mesh)
+            self._hint_specs = serve_hint_specs(cfg, mesh)
+            self._replicated = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            pol = numerics.as_policy(cfg.policy)
+            param_sh = sharding.named(
+                mesh, sharding.serve_param_pspecs(cfg, self.params, mesh,
+                                                  policy=pol))
+            if static_weights:
+                from ..models.quantize import quantize_params
+
+                self.params = quantize_params(self.params, pol,
+                                              shardings=param_sh)
+            else:
+                self.params = jax.device_put(self.params, param_sh)
+        elif static_weights:
+            from ..models.quantize import quantize_params
+
+            self.params = quantize_params(self.params,
+                                          numerics.as_policy(cfg.policy))
+        shape_s = ("1" if mesh is None else
+                   "x".join(str(mesh.shape[a]) for a in mesh.axis_names))
+        self.tel.gauge("serve_mesh_info", mesh_shape=shape_s,
+                       tp_size=str(self._tp)).set(1)
         self._prefill = jax.jit(self.model.prefill)
         self._splice_cache: Dict = {}
         # stochastic-rounding KV writes only matter for FP8 caches; the
@@ -151,9 +194,9 @@ class Engine:
                 num_pages = slots * self.max_pages_per_slot + 1
             self.pool = PagePool(num_pages, page_size, slots,
                                  self.max_pages_per_slot)
-            self.cache = self.model.make_paged_cache(
+            self.cache = self.place_cache(self.model.make_paged_cache(
                 slots, num_pages, page_size, max_seq
-            )
+            ))
             self._decode_paged = jax.jit(
                 self.model.decode_step_paged,
                 static_argnames=("page_size", "fused"),
@@ -169,6 +212,76 @@ class Engine:
             self._bt_version = -1
         else:
             raise ValueError(f"unknown cache_impl {cache_impl!r}")
+
+    # ------------------------------------------------------------------ #
+    # Tensor-parallel mesh: validation, placement, hint context
+    # ------------------------------------------------------------------ #
+    @property
+    def tp_size(self) -> int:
+        return self._tp
+
+    @classmethod
+    def _validate_mesh(cls, cfg, mesh, cache_impl: str) -> None:
+        """Mesh serving is the paged pure-GQA engine, heads sharded.
+
+        Bit-identity needs every sharded dim to split on an exact
+        head-group / ff-column / vocab-column boundary, and the paged
+        cache to hold ALL attention state (dense per-slot entries would
+        need their own rules); anything else is rejected up front with
+        the reason, not at trace time.
+        """
+        if "model" not in mesh.axis_names:
+            raise ValueError(
+                f"serving mesh needs a 'model' axis; got {mesh.axis_names}")
+        tp = mesh.shape["model"]
+        extra = {a: mesh.shape[a] for a in mesh.axis_names
+                 if a != "model" and mesh.shape[a] > 1}
+        if extra:
+            raise ValueError(
+                f"serving is tensor-parallel only; non-model mesh axes "
+                f"must have size 1, got {extra} (data-parallel serving "
+                "replicates whole engines instead)")
+        if cache_impl != "paged":
+            raise ValueError("mesh serving needs cache_impl='paged'")
+        if not cls.prefix_cache_supported(cfg):
+            raise ValueError(
+                f"mesh serving needs a pure-GQA paged cache; {cfg.name!r} "
+                f"(family={cfg.family!r}, attn_impl={cfg.attn_impl!r}) "
+                "keeps dense per-slot cache entries without TP rules")
+        for dim, what in ((cfg.n_heads, "n_heads"),
+                          (cfg.n_kv_heads, "n_kv_heads"),
+                          (cfg.d_ff, "d_ff"),
+                          (cfg.vocab_padded, "vocab_padded")):
+            if dim % tp:
+                raise ValueError(
+                    f"TP={tp} does not divide {what}={dim} for "
+                    f"{cfg.name!r}; sharded dims must split on exact "
+                    "boundaries for bit-identical serving")
+
+    def place_cache(self, tree):
+        """Attach the engine's cache sharding to ``tree`` (page codes
+        over the KV-head dim, scales and dense entries replicated);
+        passthrough on a single-device engine.  Snapshot restore routes
+        the restored cache through here — cache leaf shapes are
+        mesh-independent, so a TP=1 snapshot restores onto a TP=2 engine
+        (and vice versa) byte-for-byte."""
+        if self.mesh is None:
+            return tree
+        from ..parallel import sharding
+
+        sh = sharding.named(self.mesh,
+                            sharding.serve_cache_pspecs(tree, self.mesh))
+        return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh)
+
+    def _hints(self):
+        """Hint-role context for tracing model steps on the mesh (no-op
+        single-device).  with_sharding_constraint bakes at trace time, so
+        every jitted model call wraps itself in this."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from ..parallel.hints import use_hints
+
+        return use_hints(self.mesh, self._hint_specs)
 
     # ------------------------------------------------------------------ #
     # Prefix cache: chunk hashing, admission matching, COW, registration
@@ -391,7 +504,12 @@ class Engine:
         page (``host_transfers_total`` counts the uploads; pinned to one
         per allocating step by tests/test_paged_serving.py)."""
         if self._bt_version != self.pool.version or self._bt_device is None:
-            self._bt_device = jnp.asarray(self.pool.block_tables)
+            tables = jnp.asarray(self.pool.block_tables)
+            if self.mesh is not None:
+                # per-mesh upload: block tables stay host-side truth and
+                # replicate to every shard in the one transfer
+                tables = jax.device_put(tables, self._replicated)
+            self._bt_device = tables
             self._bt_version = self.pool.version
             self.tel.counter("host_transfers_total").inc()
         return self._bt_device
@@ -499,7 +617,7 @@ class Engine:
         assert all(p.shape[0] == plen for p in prompts), "bucket by length"
         img_off = cfg.n_img_tokens if cfg.family == "vlm" else 0
         plen_total = plen + img_off
-        with self.tel.span("prefill", n=n, plen=plen_total):
+        with self.tel.span("prefill", n=n, plen=plen_total), self._hints():
             logits, small = self._prefill(
                 self.params, self._prefill_batch_inputs(prompts)
             )
@@ -537,10 +655,14 @@ class Engine:
 
     def sync_logits(self, logits) -> np.ndarray:
         """Block on an async-dispatched step's logits (the token-emission
-        boundary); no-op passthrough for an already-host array."""
+        boundary); no-op passthrough for an already-host array.  On a
+        mesh this wait also covers the step's collectives (the all-gather
+        hints and the sharded-logits device->host gather), so the span is
+        named ``collectives`` there — BENCH phase breakdowns attribute
+        the cross-shard cost to one row."""
         if isinstance(logits, np.ndarray):
             return logits
-        with self.tel.span("sync"):
+        with self.tel.span("collectives" if self._tp > 1 else "sync"):
             return np.asarray(logits)
 
     def decode_paged(self, tokens: np.ndarray, lengths: np.ndarray, *,
@@ -561,7 +683,7 @@ class Engine:
             self.pool.ensure_capacity_batch(np.where(active, lengths + 1, 0))
             self._assert_writable(lengths, active.astype(np.int32))
             tables = self._device_block_tables()
-        with self.tel.span("decode"):
+        with self.tel.span("decode"), self._hints():
             logits, self.cache = self._decode_paged(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(lengths, jnp.int32), tables,
@@ -595,7 +717,7 @@ class Engine:
         # a step carrying any prefill chunk is charged to "prefill" (the
         # chunk dominates its T=chunk trace); pure decode steps to "decode"
         phase = "decode" if all(int(n) <= 1 for n in n_new) else "prefill"
-        with self.tel.span(phase):
+        with self.tel.span(phase), self._hints():
             logits, self.cache = self._mixed_step(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(lengths, jnp.int32),
@@ -1184,6 +1306,14 @@ def main(argv=None):
                          "admissions (continuous scheduler)")
     ap.add_argument("--watermark-low", type=float, default=0.75,
                     help="occupancy fraction that resumes admissions")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve tensor-parallel over a device mesh, e.g. "
+                         "1x2 (the model axis shards attention heads / "
+                         "MLP / vocab).  Token streams are bit-identical "
+                         "to the single-device engine.  Needs that many "
+                         "devices (XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for "
+                         "host testing)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the final Prometheus text exposition "
                          "(counters/gauges/histograms; see "
@@ -1225,6 +1355,11 @@ def main(argv=None):
     plens = [int(s) for s in str(args.prompt_len).split(",") if s]
     max_seq = (max(plens) + args.shared_prefix + args.gen
                + (cfg.n_img_tokens if cfg.family == "vlm" else 0))
+    mesh = None
+    if args.mesh is not None:
+        from .mesh import make_production_mesh, parse_mesh_arg
+
+        mesh = make_production_mesh(shape=parse_mesh_arg(args.mesh))
     eng = Engine(
         cfg, slots=args.slots, max_seq=max_seq,
         cache_impl=args.cache_impl, page_size=args.page_size,
@@ -1232,6 +1367,7 @@ def main(argv=None):
         prefix_cache=prefix_on,
         fused_decode=args.fused_decode == "on",
         telemetry=Telemetry(profile=args.profile_spans),
+        mesh=mesh,
     )
     rng = np.random.default_rng(args.seed)
     shared = (rng.integers(0, cfg.vocab, size=args.shared_prefix)

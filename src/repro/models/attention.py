@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import numerics
+from ..parallel.hints import hint
 from .layers import (
     chunked_attention,
     decode_attention,
@@ -88,6 +89,11 @@ def gqa_forward(p, x, cfg, *, is_global: bool, positions, cross_kv=None,
                 site="blocks.*.attn"):
     """Full-sequence attention. Returns (out, cache_entries)."""
     q, k, v = _gqa_qkv(p, x, cfg, positions, use_rope, site=site)
+    # Serving-TP roles (no-ops outside the engine's hint context); see
+    # gqa_decode_paged for the concatenation-only sharding contract.
+    q = hint(q, "tp_heads")
+    k = hint(k, "tp_kv")
+    v = hint(v, "tp_kv")
     window = 0 if is_global else cfg.window
     if cross_kv is not None:  # enc-dec cross attention uses given k/v
         k, v = cross_kv
@@ -98,6 +104,7 @@ def gqa_forward(p, x, cfg, *, is_global: bool, positions, cross_kv=None,
                                 cap=cfg.attn_softcap,
                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
     B, S, _, _ = q.shape
+    out = hint(out, "tp_gather")  # all-gather heads before the wo matmul
     y = qlinear(out.reshape(B, S, -1), p["wo"], cfg.policy, site=f"{site}.wo")
     return y, {"k": _kv_store(k, cfg), "v": _kv_store(v, cfg)}
 
@@ -171,6 +178,12 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
     page_size = paged["page_size"]
     positions = lengths[:, None]
     q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, use_rope, site=site)
+    # Serving TP: heads/KV-groups shard over the model axis (per-group
+    # attention concatenates across shards — no cross-shard reduction).
+    # Roles resolve only inside the engine's hint context; no-ops otherwise.
+    q = hint(q, "tp_heads")
+    k_new = hint(k_new, "tp_kv")
+    v_new = hint(v_new, "tp_kv")
 
     active = paged.get("active")
     key = paged.get("key")
@@ -205,6 +218,10 @@ def gqa_decode_paged(p, x, cfg, *, is_global: bool, cache, paged,
             q, kp, vp, ks, vs, block_tables, lengths + 1, pol,
             n_kv_heads=KV, window=window, cap=cfg.attn_softcap, site=site,
         )
+    # All-gather the head-sharded output BEFORE the wo contraction: the
+    # matmul then sees the whole array on every shard, so TP introduces no
+    # partial sums and the token stream stays bit-identical to TP=1.
+    out = hint(out, "tp_gather")
     y = qlinear(out.reshape(B, 1, -1), p["wo"], pol, site=f"{site}.wo")
     return y, {"kp": kp, "vp": vp, "ks": ks, "vs": vs}
 

@@ -170,9 +170,15 @@ def gated_mlp(x, p, pol, act_fn="silu", site: str = "ffn"):
     instead of an f32 multiply.
     """
     from .. import numerics
+    from ..parallel.hints import hint
 
     g = _act(qlinear(x, p["w_gate"], pol, site=f"{site}.w_gate"), act_fn)
     u = qlinear(x, p["w_up"], pol, site=f"{site}.w_up")
+    # Serving TP: w_gate/w_up columns shard over the model axis, so g/u
+    # (and the elementwise gate*up) compute on ff shards; roles resolve
+    # only inside the serving engine's hint context (no-ops elsewhere).
+    g = hint(g, "ffn_hidden")
+    u = hint(u, "ffn_hidden")
     if pol is not None and numerics.is_legacy_config(pol):
         # preserved QuantConfig string path (REPRO_FORCE_LEGACY_QUANTCONFIG)
         if pol.enabled and pol.elementwise:
@@ -184,6 +190,9 @@ def gated_mlp(x, p, pol, act_fn="silu", site: str = "ffn"):
             h = g * u
     else:
         h = numerics.elementwise("mul", g, u, pol, site=f"{site}.gate_up")
+    # All-gather the ff-sharded hidden BEFORE w_down: the contraction is
+    # computed whole on every shard — no partial sums, bit-identical TP.
+    h = hint(h, "ffn_gather")
     return qlinear(h, p["w_down"], pol, site=f"{site}.w_down")
 
 

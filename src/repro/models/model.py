@@ -95,7 +95,10 @@ class Model:
                 w, numerics.weight_format(cfg.policy, "unembed"), x.dtype
             )
         logits = (x @ w if w is not None else x @ params["embed"].T).astype(jnp.float32)
-        logits = hint(logits, "logits") if logits.ndim == 3 else logits
+        # 3-D train/prefill logits use the training role; 2-D decode logits
+        # get their own role so the serving engine can pin them
+        # vocab-column-sharded (a pure concatenation across shards).
+        logits = hint(logits, "logits" if logits.ndim == 3 else "logits_decode")
         logits = softcap(logits, cfg.final_softcap)
         if cfg.vocab_padded > cfg.vocab:
             mask = jnp.arange(cfg.vocab_padded) < cfg.vocab

@@ -41,12 +41,20 @@ def _path_site(path) -> str:
     )
 
 
-def quantize_params(params, policy: Union[Policy, str, None] = None):
+def quantize_params(params, policy: Union[Policy, str, None] = None,
+                    shardings=None):
     """Replace eligible weight leaves with :class:`QTensor` carriers.
 
     ``policy``: a :class:`Policy` (per-site formats via its ``weights``
     op class + overrides), a bare format string (legacy shorthand,
     per-tensor E4M3 by default), or None (E4M3 everywhere).
+
+    ``shardings``: optional pytree of ``NamedSharding`` congruent with
+    ``params`` (e.g. ``sharding.named(mesh, serve_param_pspecs(...))``).
+    When given, every leaf is placed on its sharding as it is walked —
+    QTensor ``codes`` carry the weight's sharding, per-tensor/per-block
+    ``scale`` replicates — so a mesh-serving engine's static weights come
+    out device-resident with the partitioning already attached.
     """
     if isinstance(policy, str):  # legacy fmt-string shorthand
         fmt, pol = policy, None
@@ -54,7 +62,7 @@ def quantize_params(params, policy: Union[Policy, str, None] = None):
         pol = as_policy(policy)
         fmt = pol.weights.fmt if pol is not None and pol.weight_quant else "e4m3"
 
-    def walk(path, leaf):
+    def walk(path, leaf, sh=None):
         keys = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
         name = keys[-1]
         if name in QUANT_WEIGHT_NAMES and leaf.ndim >= 2:
@@ -62,10 +70,21 @@ def quantize_params(params, policy: Union[Policy, str, None] = None):
             if pol is not None and pol.weight_quant:
                 site_fmt = pol.resolve("weights", _path_site(path)).fmt
             stacked = keys[0] in ("blocks", "enc_blocks")
-            return quantize(leaf, site_fmt, axis=0 if stacked else None)
+            qt = quantize(leaf, site_fmt, axis=0 if stacked else None)
+            if sh is not None:
+                rep = jax.sharding.NamedSharding(
+                    sh.mesh, jax.sharding.PartitionSpec())
+                qt = QTensor(codes=jax.device_put(qt.codes, sh),
+                             scale=jax.device_put(qt.scale, rep),
+                             fmt=qt.fmt)
+            return qt
+        if sh is not None:
+            return jax.device_put(leaf, sh)
         return leaf
 
-    return jax.tree_util.tree_map_with_path(walk, params)
+    if shardings is None:
+        return jax.tree_util.tree_map_with_path(walk, params)
+    return jax.tree_util.tree_map_with_path(walk, params, shardings)
 
 
 def resolve_weight(w, fmt: Optional[str] = None, dtype=jnp.bfloat16):

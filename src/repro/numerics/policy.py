@@ -68,6 +68,12 @@ OP_CLASSES = ("matmul", "weights", "attention_qk", "attention_pv",
 # codes directly, so both operands must share one format.
 SINGLE_FORMAT_IMPLS = ("lns", "lns_loop")
 
+# Tensor-parallel placement roles a policy may pin per weight site
+# (consumed by parallel.sharding.serve_param_pspecs).  Serving TP is
+# concatenation-only — roles shard an output/vocab dim or replicate; no
+# role introduces a cross-shard sum, so bit-identity survives any choice.
+SHARD_ROLES = ("columns", "rows", "replicate")
+
 
 @dataclasses.dataclass(frozen=True)
 class OpPolicy:
@@ -165,6 +171,18 @@ def _as_overrides(v) -> Tuple[Override, ...]:
     return tuple(out)
 
 
+def _as_shard_specs(v) -> Tuple[Tuple[str, str], ...]:
+    out = []
+    for item in v or ():
+        if isinstance(item, (tuple, list)) and len(item) == 2:
+            site, role = item
+            out.append((str(site), str(role)))
+        else:
+            raise TypeError(f"bad shard_specs entry {item!r}; "
+                            "expected (site_glob, role)")
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
     """The full numerics policy: one :class:`OpPolicy` per op class,
@@ -185,9 +203,21 @@ class Policy:
     elementwise: OpPolicy = OpPolicy()
     static_weights: bool = False
     overrides: Tuple[Override, ...] = ()
+    # Per-site tensor-parallel placement: (site glob, SHARD_ROLES entry)
+    # pairs, last match winning.  Empty means "use the name-based serving
+    # defaults" (parallel.sharding.serve_param_pspecs).
+    shard_specs: Tuple[Tuple[str, str], ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "overrides", _as_overrides(self.overrides))
+        object.__setattr__(self, "shard_specs",
+                           _as_shard_specs(self.shard_specs))
+        for site, role in self.shard_specs:
+            if role not in SHARD_ROLES:
+                raise ValueError(
+                    f"policy {self.name!r}: shard_specs site {site!r} has "
+                    f"role {role!r}; allowed: {SHARD_ROLES}"
+                )
         for ov in self.overrides:
             allowed = ALLOWED_IMPLS[ov.op]
             if ov.policy.impl not in allowed:
@@ -265,6 +295,16 @@ class Policy:
                 pol = ov.policy
         return pol
 
+    def resolve_shard(self, site: str) -> Optional[str]:
+        """The TP placement role pinned for a weight site, or None when
+        the policy leaves placement to the serving defaults.  Glob
+        patterns match like :meth:`resolve`, last match winning."""
+        role = None
+        for pat, r in self.shard_specs:
+            if fnmatch.fnmatchcase(site, pat):
+                role = r
+        return role
+
     # Convenience views used all over the model/serving code ------------ #
     @property
     def act_quant(self) -> bool:
@@ -301,6 +341,7 @@ class Policy:
             d[op] = getattr(self, op).to_dict()
         d["static_weights"] = self.static_weights
         d["overrides"] = [ov.to_dict() for ov in self.overrides]
+        d["shard_specs"] = [list(s) for s in self.shard_specs]
         return d
 
     @classmethod
@@ -312,6 +353,9 @@ class Policy:
         kw["static_weights"] = bool(d.get("static_weights", False))
         kw["overrides"] = tuple(
             Override.from_dict(o) for o in d.get("overrides", ())
+        )
+        kw["shard_specs"] = tuple(
+            (s[0], s[1]) for s in d.get("shard_specs", ())
         )
         return cls(**kw)
 

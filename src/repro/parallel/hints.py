@@ -51,6 +51,30 @@ def hint_meta(key: str, default=None):
     return specs.get(key, default)
 
 
+def serve_hint_specs(cfg, mesh: Mesh) -> Dict[str, P]:
+    """Serving-time TP hint roles (concatenation-only sharding).
+
+    The serving engine shards only dims whose cross-shard combination is
+    a *concatenation* — attention heads / KV head groups, MLP hidden,
+    vocab columns — and explicitly all-gathers the sharded activations
+    (``tp_gather`` / ``ffn_gather``) before the ``wo`` / ``w_down``
+    contractions, so each shard's matmuls always see whole arrays.  No
+    psum ever touches values, which is what keeps a TP=N token stream
+    bit-identical to single-device.  These roles exist only inside the
+    engine's ``use_hints`` context; ``default_hint_specs`` (training)
+    never defines them, so the model-code hint sites are no-ops there.
+    """
+    return {
+        "act": P(None, None, None),                # [B, S, D] replicated
+        "tp_heads": P(None, None, "model", None),  # q [B, S, H, hd]
+        "tp_kv": P(None, None, "model", None),     # k/v new [B, S, KV, hd]
+        "tp_gather": P(),                          # attn out, before wo
+        "ffn_hidden": P(None, None, "model"),      # g/u [B, S, F]
+        "ffn_gather": P(None, None, None),         # gated h, before w_down
+        "logits_decode": P(None, "model"),         # [B, Vp] decode logits
+    }
+
+
 def default_hint_specs(cfg, mesh: Mesh, *, batch_shardable: bool = True,
                        decode: bool = False) -> Dict[str, P]:
     from .sharding import fsdp_axes, seq_parallel, tp_size

@@ -160,6 +160,86 @@ def param_pspecs(cfg, params_tree, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(rule, params_tree)
 
 
+def serve_param_pspecs(cfg, params_tree, mesh: Mesh, policy=None):
+    """Concatenation-only TP specs for the serving engine (bit-identical).
+
+    Unlike :func:`param_pspecs` (training: FSDP storage + row-sharded
+    ``wo``/``w_down`` whose outputs psum), serving shards ONLY dims whose
+    cross-shard combination is a concatenation: ``wq``/``wk``/``wv`` and
+    ``w_gate``/``w_up`` output columns, ``embed`` vocab rows (the token
+    gather is exact), untied ``unembed`` vocab columns.  ``wo``,
+    ``w_down``, and every other leaf replicate; the engine's hint roles
+    (``parallel.hints.serve_hint_specs``) all-gather the head-/ff-sharded
+    activations before those matmuls so every contraction is computed
+    whole on each shard — no partial sums, so a TP=N token stream is
+    bit-identical to TP=1.
+
+    ``policy`` (a :class:`~repro.numerics.policy.Policy`) may pin a
+    placement role per site via ``shard_specs``; QTensor ``codes`` leaves
+    shard like their weight, ``scale`` leaves replicate.
+    """
+    tp = tp_size(mesh)
+    head_tp = _div(cfg.n_heads, tp) and _div(cfg.n_kv_heads, tp)
+    ff_tp = _div(cfg.d_ff, tp)
+    vocab_tp = _div(cfg.vocab_padded, tp)
+
+    def default_role(name: str, shape) -> str:
+        if name == "embed":
+            return "rows" if vocab_tp else "replicate"
+        if name == "unembed":
+            return "columns" if vocab_tp else "replicate"
+        if name in ("wq", "wk", "wv") and head_tp:
+            return "columns"
+        if name in ("w_gate", "w_up") and ff_tp and len(shape) == 2:
+            return "columns"
+        return "replicate"
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(e, "key", getattr(e, "idx", None)) for e in path]
+        name = keys[-1]
+        if name == "codes":  # static-quantized weight: shard like the weight
+            name = keys[-2]
+        elif name == "scale":
+            return P(*([None] * leaf.ndim))
+        stacked = keys[0] in ("blocks", "enc_blocks")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        lead = (None,) if stacked else ()
+        if len(shape) <= 1:  # biases / norm scales: replicate
+            return P(*(lead + (None,) * len(shape)))
+        role = default_role(name, shape)
+        if policy is not None and getattr(policy, "shard_specs", ()):
+            site = ".".join(str(k) for k in keys
+                            if k is not None and str(k) != "codes")
+            override = policy.resolve_shard(site)
+            if override is not None:
+                role = override
+        if role == "columns":
+            return P(*(lead + (None,) * (len(shape) - 1) + ("model",)))
+        if role == "rows":
+            return P(*(lead + ("model",) + (None,) * (len(shape) - 1)))
+        return P(*(lead + (None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def serve_cache_pspecs(cache_tree, mesh: Mesh):
+    """Paged-cache specs for serving TP: page codes shard over the KV-head
+    dim (``kp``/``vp`` are [pages, page, KV, hd]; each shard holds its KV
+    head groups' codes for every page), per-page scales and any dense
+    entries replicate.  Block tables never appear here — they stay
+    host-side and upload replicated (``Engine._device_block_tables``)."""
+
+    def rule(path, leaf):
+        keys = [getattr(e, "key", getattr(e, "idx", None)) for e in path]
+        name = keys[-1]
+        lead = (None,) if keys[0] == "blocks" else ()
+        if name in ("kp", "vp"):
+            return P(*(lead + (None, None, "model", None)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
 def batch_pspecs(cfg, mesh: Mesh):
     """Batches shard over the fsdp axes; sequence over ``model`` under SP."""
     fs = fsdp_axes(mesh)

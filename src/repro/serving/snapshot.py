@@ -223,7 +223,12 @@ def load_snapshot(ckpt_dir, eng, sched: ContinuousScheduler,
                 "(engine must be constructed with the same geometry)"
             )
         leaves.append(jax.numpy.asarray(arr, like.dtype))
-    eng.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+    # Placement goes through the engine: cache leaf shapes (and the saved
+    # bytes) are mesh-independent, so the same snapshot restores onto a
+    # single-device engine or any TP mesh — place_cache re-attaches the
+    # new engine's shardings (elastic restore, TP=1 <-> TP=2).
+    eng.cache = eng.place_cache(
+        jax.tree_util.tree_unflatten(treedef, leaves))
 
     # --- host allocator + engine host state ---------------------------- #
     eng.pool.load_state_dict(data["pool"])

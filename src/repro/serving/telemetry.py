@@ -135,8 +135,14 @@ METRIC_CATALOG: Tuple[MetricSpec, ...] = (
     MetricSpec("serve_phase_seconds", "histogram",
                "Engine step time decomposed by phase "
                "(admit/prefill/decode/kv_write/host/sync + auxiliary "
-               "spans).",
+               "spans; mesh engines time the per-step cross-shard "
+               "wait as 'collectives' instead of 'sync').",
                labels=("phase",), buckets=_PHASE_BUCKETS),
+    MetricSpec("serve_mesh_info", "gauge",
+               "Info gauge (constant 1) carrying the serving engine's "
+               "device-mesh layout: mesh_shape like '1x2' ('1' single-"
+               "device) and tp_size (model-axis size).",
+               labels=("mesh_shape", "tp_size")),
     MetricSpec("host_transfers_total", "counter",
                "Block-table host->device uploads (at most one per step: "
                "the engine caches the device copy and re-uploads only "

@@ -27,6 +27,8 @@ REQUIRED_FLAGS = {
     "serve_paged_gap": ["serve_paged_gap/fused_outputs_equal",
                         "serve_paged_gap/prefix_outputs_equal",
                         "serve_paged_gap/impl_outputs_equal"],
+    "serve_mesh": ["serve_mesh/outputs_equal",
+                   "serve_mesh/cache_equal"],
 }
 
 

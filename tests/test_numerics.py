@@ -108,6 +108,30 @@ def test_registry_unknown_name():
         get_policy("no_such_policy")
 
 
+def test_shard_specs_roundtrip_and_resolution():
+    """Per-site sharding roles (ISSUE 10): JSON round-trip, fnmatch
+    last-match-wins resolution, and role validation.  Stacked params'
+    sites have no block index ("blocks.attn.wq"), so globs look like
+    "blocks.*" / "*.wq", not "blocks.*.attn.wq"."""
+    p = Policy(
+        name="tp",
+        weights=OpPolicy(fmt="e4m3"),
+        static_weights=True,
+        shard_specs=(("blocks.*", "columns"),
+                     ("*.wo", "replicate"),
+                     ("embed", "rows")),
+    )
+    q = Policy.from_json(p.to_json())
+    assert q == p and q.shard_specs == p.shard_specs
+    assert Policy.from_dict(p.to_dict()) == p
+    assert p.resolve_shard("blocks.attn.wq") == "columns"
+    assert p.resolve_shard("blocks.attn.wo") == "replicate"  # last match wins
+    assert p.resolve_shard("embed") == "rows"
+    assert p.resolve_shard("unembed") is None
+    with pytest.raises(ValueError, match="role 'diagonal'"):
+        Policy(name="bad", shard_specs=(("*", "diagonal"),))
+
+
 def test_legacy_alias_maps_through_to_policy():
     """Each legacy --quant flag and its preset agree after the
     QuantConfig round trip (the deprecation-alias contract)."""
